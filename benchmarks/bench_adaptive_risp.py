@@ -1,0 +1,36 @@
+"""Thesis Ch. 5 (Figs 5.2-5.5, Table 5.1): adaptive (tool-state) RISP on the
+534-workflow corpus."""
+from __future__ import annotations
+
+import time
+
+from repro.core import evaluate_all, galaxy_ch5_corpus
+
+PAPER = {
+    "PT": {"LR_pct": 40.0, "stored": 61, "FRSR": 3.0, "PISRS_pct": 0.71},
+    "TSAR": {"LR_pct": 49.0, "stored": 7598},
+    "TSPAR": {"stored": 197},
+    "TSFR": {"stored": 475},
+}
+
+
+def run() -> list[str]:
+    corpus = galaxy_ch5_corpus()
+    t0 = time.perf_counter()
+    reports = evaluate_all(corpus, with_state=True)
+    dt_us = (time.perf_counter() - t0) * 1e6 / len(corpus)
+    lines = []
+    for name, r in reports.items():
+        row = r.row()
+        paper = PAPER.get(name, {})
+        lines.append(
+            f"risp_ch5_adaptive_{name},{dt_us:.1f},"
+            f"LR={row['LR_pct']}(paper {paper.get('LR_pct', '-')}) "
+            f"stored={row['stored']}(paper {paper.get('stored', '-')}) "
+            f"PSRR={row['PSRR_pct']} FRSR={row['FRSR']} PISRS={row['PISRS_pct']}"
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

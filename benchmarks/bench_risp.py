@@ -1,0 +1,36 @@
+"""Thesis Ch. 4 (Figs 4.3-4.6, Table 4.1): PT vs TSAR/TSPAR/TSFR on the
+Galaxy-calibrated 508-workflow corpus — LR, PSRR, FRSR, PISRS."""
+from __future__ import annotations
+
+import time
+
+from repro.core import evaluate_all, galaxy_ch4_corpus
+
+PAPER = {  # thesis-reported values for the real 508-workflow Galaxy corpus
+    "PT": {"LR_pct": 51.97, "stored": 49, "FRSR": 5.39, "PISRS_pct": 0.68},
+    "TSAR": {"LR_pct": 61.81, "stored": 7165, "PISRS_pct": 100.0},
+    "TSPAR": {"LR_pct": 51.38, "stored": 159},
+    "TSFR": {"LR_pct": 13.78, "stored": 457},
+}
+
+
+def run() -> list[str]:
+    corpus = galaxy_ch4_corpus()
+    t0 = time.perf_counter()
+    reports = evaluate_all(corpus)
+    dt_us = (time.perf_counter() - t0) * 1e6 / len(corpus)
+    lines = []
+    for name, r in reports.items():
+        row = r.row()
+        paper = PAPER.get(name, {})
+        lines.append(
+            f"risp_ch4_{name},{dt_us:.1f},"
+            f"LR={row['LR_pct']}(paper {paper.get('LR_pct', '-')}) "
+            f"stored={row['stored']}(paper {paper.get('stored', '-')}) "
+            f"PSRR={row['PSRR_pct']} FRSR={row['FRSR']} PISRS={row['PISRS_pct']}"
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

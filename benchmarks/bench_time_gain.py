@@ -1,0 +1,120 @@
+"""Thesis Ch. 3 (Table 3.1 / Figs 3.5, 3.9) + Ch. 4.5.4 (Fig 4.8):
+wall-clock execution-time gain from intermediate-data reuse, measured by
+running REAL JAX pipelines through the prefix-skipping executor.
+
+Part 1 — the three image pipelines, three modes each (thesis Fig 3.5):
+  WoI: no store;  WtI: store (overhead);  Skip: rerun reusing stored states.
+Part 2 — 32-pipeline study (thesis Fig 4.8): RISP-guided storing across a
+workflow stream; reports total saved time (thesis: 74%).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import IntermediateStore, ProvenanceLog, RISP, TSAR, WorkflowExecutor
+
+from . import pipelines as P
+
+
+def _fresh_executor(tmp, policy, provenance=None):
+    ex = WorkflowExecutor(
+        store=IntermediateStore(tmp), policy=policy, provenance=provenance
+    )
+    P.register_modules(ex)
+    return ex
+
+
+def run_three_pipelines() -> list[str]:
+    data = P.make_images()
+    lines = []
+    for name, steps in P.PIPELINES.items():
+        with tempfile.TemporaryDirectory() as tmp:
+            # WoI: never store
+            ex = _fresh_executor(tmp + "/a", RISP())
+            t0 = time.perf_counter()
+            ex.run("D1", data, steps, f"{name}-warmup")  # jit warmup
+            woi = ex.run("D1x", data, steps, f"{name}-woi").exec_seconds
+
+            # WtI: store per TSAR (max overhead), then Skip reuses
+            ex2 = _fresh_executor(tmp + "/b", TSAR())
+            r_wti = ex2.run("D2", data, steps, f"{name}-wti")
+            wti = r_wti.exec_seconds + r_wti.store_seconds
+            r_skip = ex2.run("D2", data, steps, f"{name}-skip")
+            skip = r_skip.total_seconds
+            gain = woi - skip
+            lines.append(
+                f"timegain_{name},{woi*1e6:.0f},"
+                f"WoI={woi:.3f}s WtI={wti:.3f}s Skip={skip:.3f}s "
+                f"gain={gain:.3f}s skipped={r_skip.n_skipped}/{len(steps)}"
+            )
+    return lines
+
+
+def run_32_pipeline_study(n: int = 32, seed: int = 7) -> list[str]:
+    """Stream of 32 pipelines over two datasets with shared prefixes."""
+    rng = np.random.default_rng(seed)
+    datasets = {"4KCanola": P.make_images(seed=1), "10KCanola": P.make_images(seed=2)}
+    # thesis-faithful structure: the expensive stages (transform/estimate/fit,
+    # cf. the 1163s-of-1199s descriptor in Table 3.1) form the SHARED PREFIX;
+    # users vary the cheap analysis tail ("changing only a few modules")
+    suffix_pool = [
+        [("analyze", {"detail": 1})],
+        [("analyze", {"detail": 2})],
+        [("analyze", {"detail": 4})],
+        [("analyze", {"detail": 8})],
+    ]
+    with tempfile.TemporaryDirectory() as tmp:
+        prov = ProvenanceLog()
+        ex = _fresh_executor(tmp, RISP(with_state=True), provenance=prov)
+        # jit warmup outside the timed study
+        for d in datasets.values():
+            ex_w = _fresh_executor(tmp + "/w", RISP())
+            ex_w.run("w", d, ["transform", "estimate", "fit", "analyze"], "w")
+
+        gains = []
+        baseline_total = 0.0
+        actual_total = 0.0
+        cold_time: dict[str, float] = {}
+        # each dataset has its standard protocol parameters (as in Galaxy
+        # protocols), so deep rules reach confidence 1 and RISP stores the
+        # expensive fit output, not just the cheap prefix
+        fit_cfg_for = {"4KCanola": {"n_clusters": 8}, "10KCanola": {"n_clusters": 12}}
+        for i in range(n):
+            dname = "4KCanola" if rng.random() < 0.6 else "10KCanola"
+            steps = (
+                ["transform", "estimate", ("fit", fit_cfg_for[dname])]
+                + suffix_pool[int(rng.integers(4))]
+            )
+            res = ex.run(dname, datasets[dname], steps, f"p{i}")
+            key = dname + str(steps)
+            # baseline = measured full-execution time for this exact pipeline
+            full = sum(res.module_seconds)
+            if res.n_skipped == 0:
+                cold_time[key] = res.exec_seconds
+            est_full = cold_time.get(key)
+            if est_full is None:
+                # estimate skipped-prefix time from the cost model
+                est_full = res.exec_seconds + ex.cost_model.prefix_exec_seconds(
+                    res.workflow.prefix(res.n_skipped)
+                )
+            baseline_total += est_full
+            actual_total += res.total_seconds
+            gains.append(est_full - res.total_seconds)
+        saved_pct = 100.0 * (baseline_total - actual_total) / baseline_total
+    return [
+        f"timegain_32pipelines,{actual_total/n*1e6:.0f},"
+        f"baseline={baseline_total:.1f}s actual={actual_total:.1f}s "
+        f"saved={saved_pct:.1f}%(paper 74%) reused_runs="
+        f"{sum(1 for g in gains if g > 0)}/{n}"
+    ]
+
+
+def run() -> list[str]:
+    return run_three_pipelines() + run_32_pipeline_study()
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

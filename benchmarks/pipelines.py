@@ -1,0 +1,131 @@
+"""Image-processing-style module library mirroring the thesis' Ch. 3 study.
+
+Three pipelines over synthetic image batches (the thesis used Flavia /
+2KCanola / 4KCanola):
+
+  leaves_recognition: descriptor -> matching                (LRWoI/LRWtI/LRSD)
+  segmentation:       transform -> estimate -> fit -> analyze (SWoI/SWtI/SSTA)
+  clustering:         transform -> estimate -> fit -> analyze (CWoI/CWtI/CSTA)
+
+Modules are real JAX compute (conv stacks, pairwise distances, k-means) sized
+so the compute/storage trade-off is meaningful on this container.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ModuleSpec, WorkflowExecutor
+
+
+def make_images(n: int = 48, hw: int = 96, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random((n, hw, hw, 3)).astype(np.float32))
+
+
+# -- modules -----------------------------------------------------------------
+@jax.jit
+def transform(x):
+    """Colour conversion + normalization (thesis: transformation stage)."""
+    gray = x @ jnp.asarray([0.299, 0.587, 0.114])
+    g = (gray - gray.mean()) / (gray.std() + 1e-6)
+    return jnp.stack([g, jnp.square(g), jnp.sqrt(jnp.abs(g))], axis=-1)
+
+
+@jax.jit
+def estimate(x):
+    """Feature extraction: small conv pyramid (thesis: estimation stage)."""
+    k = jnp.ones((5, 5, x.shape[-1], 8), x.dtype) / 25.0
+    h = jax.lax.conv_general_dilated(
+        x, k, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jax.nn.relu(h)
+    k2 = jnp.ones((3, 3, 8, 16), x.dtype) / 9.0
+    h = jax.lax.conv_general_dilated(
+        h, k2, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return jax.nn.relu(h).reshape(x.shape[0], -1)
+
+
+def fit(x, n_clusters=8, iters=80):
+    """k-means Lloyd iterations (thesis: model fitting — the expensive step)."""
+    feats = x
+    cent = feats[:n_clusters]
+
+    def step(c, _):
+        d = jnp.sum(jnp.square(feats[:, None] - c[None]), axis=-1)
+        a = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(a, n_clusters, dtype=feats.dtype)
+        c_new = (onehot.T @ feats) / jnp.maximum(onehot.sum(0)[:, None], 1.0)
+        return c_new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    d = jnp.sum(jnp.square(feats[:, None] - cent[None]), axis=-1)
+    return {"centroids": cent, "assign": jnp.argmin(d, axis=1), "feats": feats}
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnames="detail")
+def analyze(state, detail: int = 1):
+    """Cluster statistics / report (thesis: analysis stage). ``detail`` is a
+    tool-state parameter: different report depths -> different outputs."""
+    feats, assign = state["feats"], state["assign"]
+    k = state["centroids"].shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=feats.dtype)
+    sizes = onehot.sum(0)
+    spread = (onehot.T @ jnp.square(feats)).sum(-1) / jnp.maximum(sizes, 1.0)
+    out = {"sizes": sizes, "spread": spread}
+    for q in range(1, detail):
+        out[f"q{q}"] = jnp.percentile(spread, 100 * q / detail)
+    return out
+
+
+@jax.jit
+def descriptor(x):
+    """Leaves descriptor: dense gradient histograms (expensive)."""
+    gray = x @ jnp.asarray([0.299, 0.587, 0.114])
+    gx = jnp.diff(gray, axis=1, prepend=gray[:, :1])
+    gy = jnp.diff(gray, axis=2, prepend=gray[:, :, :1])
+    mag = jnp.sqrt(gx**2 + gy**2)
+    ang = jnp.arctan2(gy, gx)
+    bins = jnp.linspace(-np.pi, np.pi, 17)
+    hists = []
+    for i in range(16):
+        m = ((ang >= bins[i]) & (ang < bins[i + 1])).astype(gray.dtype)
+        hists.append((mag * m).reshape(gray.shape[0], 12, 8, 12, 8).sum((2, 4)))
+    return jnp.stack(hists, -1).reshape(gray.shape[0], -1)
+
+
+@jax.jit
+def matching(desc):
+    """All-pairs descriptor matching + kNN vote."""
+    d2 = (
+        jnp.sum(desc**2, 1)[:, None]
+        - 2 * desc @ desc.T
+        + jnp.sum(desc**2, 1)[None, :]
+    )
+    knn = jnp.argsort(d2, axis=1)[:, 1:6]
+    return {"knn": knn, "score": jnp.sort(d2, axis=1)[:, 1:6].mean()}
+
+
+PIPELINES = {
+    "leaves_recognition": ["descriptor", "matching"],
+    "segmentation": ["transform", "estimate", "fit", "analyze"],
+    "clustering": ["transform", "estimate", ("fit", {"n_clusters": 12}), "analyze"],
+}
+
+
+def register_modules(ex: WorkflowExecutor) -> None:
+    ex.register(ModuleSpec("transform", lambda x: transform(x)))
+    ex.register(ModuleSpec("estimate", lambda x: estimate(x)))
+    ex.register(
+        ModuleSpec("fit", lambda x, n_clusters=8, iters=80: fit(x, n_clusters, iters),
+                   {"n_clusters": 8, "iters": 80})
+    )
+    ex.register(ModuleSpec("analyze", lambda s, detail=1: analyze(s, detail), {"detail": 1}))
+    ex.register(ModuleSpec("descriptor", lambda x: descriptor(x)))
+    ex.register(ModuleSpec("matching", lambda d: matching(d)))

@@ -1,0 +1,130 @@
+"""Roofline report generator: reads results/dryrun/*.json -> markdown tables
+(§Dry-run, §Roofline, §Perf) + the CSV lines for benchmarks.run."""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(tag: str = "baseline") -> list[dict]:
+    out = []
+    for p in sorted(RESULTS.glob(f"*__{tag}.json" if tag else "*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def load_all() -> list[dict]:
+    return [json.loads(p.read_text()) for p in sorted(RESULTS.glob("*.json"))]
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def baseline_table(mesh: str = "pod") -> str:
+    rows = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant | "
+        "peak_HBM_GiB | MODEL_FLOPS/HLO | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load("baseline"):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — | "
+                f"skipped: {r['reason'][:40]}… | — | — | — |"
+            )
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {rl['compute_s']:.4f} | "
+            f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | {rl['dominant']} | "
+            f"{fmt_bytes(r['memory']['peak_hbm_bytes'])} | "
+            f"{(r['useful_flops_ratio'] or 0):.3f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_status_table() -> str:
+    counts = defaultdict(int)
+    for r in load("baseline"):
+        counts[r["status"]] += 1
+    return (
+        f"baseline cells: ok={counts['ok']} skipped={counts['skipped']} "
+        f"failed={counts['failed']} (80 = 40 cells x 2 meshes)"
+    )
+
+
+def perf_rows() -> list[dict]:
+    """All tagged (hillclimb) records, sorted by arch/tag."""
+    out = [r for r in load_all() if r.get("tag") and r["tag"] != "baseline"]
+    return sorted(out, key=lambda r: (r["arch"], r["shape"], r["tag"]))
+
+
+def perf_table() -> str:
+    rows = [
+        "| tag | arch | shape | mesh | step_s | dominant | peak_GiB | RF | changes |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in perf_rows():
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['tag']} | {r['arch']} | {r['shape']} | {r['mesh']} | FAILED | "
+                f"{r.get('error','')[:60]} | | | |"
+            )
+            continue
+        rl = r["roofline"]
+        ov = "; ".join(r.get("cfg_overrides", []))[:80]
+        extra = []
+        if r.get("grad_accum", 1) > 1:
+            extra.append(f"ga={r['grad_accum']}")
+        if r.get("remat") not in (None, "none"):
+            extra.append(f"remat={r['remat']}")
+        rows.append(
+            f"| {r['tag']} | {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rl['step_time_s']:.3f} | {rl['dominant']} | "
+            f"{fmt_bytes(r['memory']['peak_hbm_bytes'])} | "
+            f"{r['roofline_fraction']:.3f} | {' '.join(extra)} {ov} |"
+        )
+    return "\n".join(rows)
+
+
+def run() -> list[str]:
+    lines = []
+    n_ok = n_skip = 0
+    worst = (None, 1e9)
+    for r in load("baseline"):
+        if r["status"] == "ok":
+            n_ok += 1
+            if r["mesh"] == "pod" and r["kind"] in ("train", "full_graph"):
+                if r["roofline_fraction"] < worst[1]:
+                    worst = (f"{r['arch']}/{r['shape']}", r["roofline_fraction"])
+        elif r["status"] == "skipped":
+            n_skip += 1
+    lines.append(f"dryrun_baseline,0,ok={n_ok} skipped={n_skip} worst_train_RF={worst[0]}:{worst[1]:.3f}")
+    best = {}
+    for r in perf_rows():
+        if r["status"] != "ok":
+            continue
+        key = (r["arch"], r["shape"])
+        if key not in best or r["roofline_fraction"] > best[key]["roofline_fraction"]:
+            best[key] = r
+    for (arch, shape), r in sorted(best.items()):
+        lines.append(
+            f"hillclimb_{arch}_{shape},{r['roofline']['step_time_s']*1e6:.0f},"
+            f"RF={r['roofline_fraction']:.3f} tag={r['tag']} "
+            f"peak={fmt_bytes(r['memory']['peak_hbm_bytes'])}GiB"
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    print(dryrun_status_table())
+    print()
+    print(baseline_table("pod"))
+    print()
+    print(perf_table())

@@ -1,0 +1,42 @@
+"""Benchmark harness — one entry per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_adaptive_risp,
+        bench_prefix_cache,
+        bench_risp,
+        bench_serving_load,
+        bench_time_gain,
+        roofline,
+    )
+
+    suites = [
+        ("risp_ch4 (Figs 4.3-4.6, Table 4.1)", bench_risp.run),
+        ("adaptive_risp_ch5 (Figs 5.2-5.5, Table 5.1)", bench_adaptive_risp.run),
+        ("time_gain_ch3/ch4 (Table 3.1, Figs 3.5/3.9/4.8)", bench_time_gain.run),
+        ("serving_load_ch6 (Table 6.1)", bench_serving_load.run),
+        ("prefix_cache (beyond-paper)", bench_prefix_cache.run),
+        ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, fn in suites:
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{label},-1,FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: RISP-managed intermediate data in a JAX workflow, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax.numpy as jnp
+
+from repro.core import IntermediateStore, ModuleSpec, RISP, WorkflowExecutor
+
+# 1. an executor with a RISP storage policy
+tmp = tempfile.mkdtemp()
+ex = WorkflowExecutor(store=IntermediateStore(tmp), policy=RISP(with_state=True))
+
+# 2. register modules (any JAX-callable stages)
+ex.register(ModuleSpec("normalize", lambda x: (x - x.mean()) / (x.std() + 1e-6)))
+ex.register(ModuleSpec("featurize", lambda x: jnp.stack([x, x**2, jnp.sin(x)], -1)))
+ex.register(ModuleSpec("score", lambda f, scale=1.0: (f.sum(-1) * scale)))
+
+data = jnp.linspace(-3, 3, 10_000)
+
+# 3. run workflows; RISP mines the history and stores the reusable prefix
+for i, scale in enumerate([1.0, 1.0, 2.0, 0.5]):
+    r = ex.run("sensor-A", data, ["normalize", "featurize", ("score", {"scale": scale})])
+    print(
+        f"run {i}: skipped {r.n_skipped}/3 modules, "
+        f"stored {len(r.stored_keys)} artifact(s), "
+        f"exec {r.exec_seconds*1e3:.1f} ms"
+    )
+
+print(f"\nstore now holds {len(ex.store.records)} artifacts "
+      f"({ex.store.total_disk_bytes/1e6:.2f} MB compressed)")
+print("RISP reusable-pipeline likeliness:",
+      f"{100*ex.policy.n_reusable_pipelines/ex.policy.n_pipelines:.0f}%")

@@ -1,0 +1,92 @@
+"""End-to-end training driver: ~100M-param LM, few hundred steps, synthetic
+data, checkpoint-restart with injected failure, RISP-managed data pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py                # quick demo
+    PYTHONPATH=src python examples/train_lm.py --full         # ~100M / 200 steps
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.models.layers import init_params, param_count
+from repro.optim import AdamWConfig
+from repro.runtime import TrainDriver
+from repro.train import build_param_specs, build_train_step, make_train_state
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true", help="~100M params, 200 steps")
+ap.add_argument("--steps", type=int, default=None)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+args = ap.parse_args()
+
+base = get_config("tinyllama-1.1b", smoke=True)
+if args.full:
+    cfg = dataclasses.replace(
+        base, name="repro-100m", n_layers=10, d_model=640, n_heads=10,
+        n_kv_heads=5, d_head=64, d_ff=2560, vocab=32000,
+    )
+    n_steps = args.steps or 200
+else:
+    cfg = dataclasses.replace(base, n_layers=4, d_model=128, n_heads=4,
+                              n_kv_heads=2, d_head=32, d_ff=512, vocab=2048)
+    n_steps = args.steps or 30
+
+cell = ShapeCell("train", "train", {"seq_len": args.seq, "global_batch": args.batch})
+specs = build_param_specs(cfg, cell)
+print(f"model: {cfg.name}  params={param_count(specs)/1e6:.1f}M  "
+      f"tokens/step={args.batch*args.seq}")
+
+params = init_params(jax.random.PRNGKey(0), specs, cfg.dtype)
+state = make_train_state(params)
+opt = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=n_steps)
+step_fn = build_train_step(cfg, cell, opt)
+
+rng = np.random.default_rng(0)
+
+
+# learnable synthetic language: zipf unigram + deterministic bigram skeleton
+_zipf = (np.arange(1, cfg.vocab + 1, dtype=np.float64)) ** -1.2
+_zipf /= _zipf.sum()
+
+
+def make_batch(step: int) -> dict:
+    # deterministic step->data assignment (restart-safe, DESIGN §8)
+    r = np.random.default_rng(step)
+    toks = r.choice(cfg.vocab, size=(args.batch, args.seq + 1), p=_zipf)
+    follow = (toks[:, :-1] * 31 + 7) % cfg.vocab  # bigram structure
+    mask = r.random((args.batch, args.seq)) < 0.5
+    toks[:, 1:] = np.where(mask, follow, toks[:, 1:])
+    return {
+        "tokens": jax.numpy.asarray(toks[:, :-1], jax.numpy.int32),
+        "targets": jax.numpy.asarray(toks[:, 1:], jax.numpy.int32),
+    }
+
+
+ckpt_dir = tempfile.mkdtemp()
+driver = TrainDriver(
+    train_step=step_fn,
+    make_batch=make_batch,
+    ckpt=CheckpointManager(ckpt_dir, keep=2, async_save=True),
+    ckpt_every=max(n_steps // 4, 5),
+    fail_at_steps=(n_steps // 2,),  # injected node failure mid-run
+)
+t0 = time.time()
+state, log = driver.run(state, n_steps)
+dt = time.time() - t0
+
+losses = [e["loss"] for e in log if "loss" in e]
+restarts = [e for e in log if e.get("event") == "restart"]
+print(f"trained {n_steps} steps in {dt:.1f}s  "
+      f"loss {losses[0]:.3f} -> {losses[-1]:.3f}  "
+      f"(recovered from {len(restarts)} injected failure(s))")
+assert losses[-1] < losses[0], "loss should decrease"
+print("checkpoints at:", ckpt_dir)

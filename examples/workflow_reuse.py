@@ -1,0 +1,64 @@
+"""SWfMS scenario: replay a Galaxy-like history through all four storage
+policies (the thesis' core experiment), then execute real JAX pipelines with
+RISP-guided reuse and failure recovery.
+
+    PYTHONPATH=src python examples/workflow_reuse.py
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+
+from benchmarks import pipelines as P
+from repro.core import (
+    IntermediateStore,
+    ModuleSpec,
+    RISP,
+    WorkflowError,
+    WorkflowExecutor,
+    evaluate_all,
+    galaxy_ch4_corpus,
+)
+
+# --- 1. policy comparison on the 508-workflow corpus (thesis Table 4.1) ----
+print("== policy replay on the Galaxy-calibrated corpus ==")
+for name, rep in evaluate_all(galaxy_ch4_corpus()).items():
+    row = rep.row()
+    print(f"  {name:6s} LR={row['LR_pct']:6.2f}%  stored={row['stored']:5d}  "
+          f"FRSR={row['FRSR']:5.2f}  PISRS={row['PISRS_pct']:5.2f}%")
+
+# --- 2. real execution with reuse ------------------------------------------
+print("\n== executing image pipelines with RISP reuse ==")
+tmp = tempfile.mkdtemp()
+ex = WorkflowExecutor(store=IntermediateStore(tmp), policy=RISP(with_state=True))
+P.register_modules(ex)
+data = P.make_images(n=32)
+
+r1 = ex.run("canola", data, ["transform", "estimate", "fit", "analyze"], "w1")
+print(f"  w1 cold:   {r1.exec_seconds:.2f}s, stored {r1.stored_keys}")
+r2 = ex.run("canola", data, ["transform", "estimate", "fit", ("analyze", {"detail": 4})], "w2")
+print(f"  w2 warm:   skipped {r2.n_skipped}/4, {r2.total_seconds:.2f}s")
+
+# --- 3. failure recovery (thesis Ch. 3.5.2) ---------------------------------
+print("\n== failure recovery ==")
+calls = {"n": 0}
+
+
+def flaky(state, detail=1):
+    calls["n"] += 1
+    if calls["n"] == 1:
+        raise RuntimeError("transient OOM")
+    return P.analyze(state, detail)
+
+
+ex.register(ModuleSpec("flaky_analyze", flaky, {"detail": 1}))
+try:
+    ex.run("canola", data, ["transform", "estimate", "fit", "flaky_analyze"], "w3")
+except WorkflowError as e:
+    print(f"  w3 failed at module {e.failed_at} — recovery point persisted")
+r4 = ex.run("canola", data, ["transform", "estimate", "fit", "flaky_analyze"], "w4")
+print(f"  w4 retry:  skipped {r4.n_skipped}/4 (resumed at failure point), "
+      f"{r4.total_seconds:.2f}s")

@@ -1,0 +1,3 @@
+from .checkpoint import CheckpointInfo, CheckpointManager
+
+__all__ = ["CheckpointInfo", "CheckpointManager"]

@@ -1,0 +1,44 @@
+"""Core RISP library: the paper's contribution as composable components."""
+from .adaptive import adaptive_policy, adaptive_risp
+from .corpus import CorpusSpec, galaxy_ch4_corpus, galaxy_ch5_corpus, generate_corpus
+from .cost import CostModel
+from .executor import RunResult, WorkflowError, WorkflowExecutor
+from .metrics import PolicyReport, evaluate_all, evaluate_policy
+from .provenance import ProvenanceLog, RunRecord
+from .risp import RISP, TSAR, TSFR, TSPAR, Recommendation, StoragePolicy, make_policy
+from .rules import Rule, RuleMiner
+from .store import IntermediateStore
+from .workflow import ModuleRef, ModuleSpec, PrefixKey, ToolState, Workflow
+
+__all__ = [
+    "CorpusSpec",
+    "CostModel",
+    "IntermediateStore",
+    "ModuleRef",
+    "ModuleSpec",
+    "PolicyReport",
+    "PrefixKey",
+    "ProvenanceLog",
+    "RISP",
+    "Recommendation",
+    "Rule",
+    "RuleMiner",
+    "RunRecord",
+    "RunResult",
+    "StoragePolicy",
+    "TSAR",
+    "TSFR",
+    "TSPAR",
+    "ToolState",
+    "Workflow",
+    "WorkflowError",
+    "WorkflowExecutor",
+    "adaptive_policy",
+    "adaptive_risp",
+    "evaluate_all",
+    "evaluate_policy",
+    "galaxy_ch4_corpus",
+    "galaxy_ch5_corpus",
+    "generate_corpus",
+    "make_policy",
+]

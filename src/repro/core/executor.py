@@ -1,0 +1,244 @@
+"""Prefix-skipping workflow executor with RISP-guided storing + error recovery.
+
+Execution of a pipeline ``D -> M1 -> ... -> Mn``:
+
+ 1. Ask the storage policy for the longest previously-stored prefix whose
+    artifact is still present in the store; load it and skip those modules
+    (thesis Ch. 3: "skipping procedure ... increases the flexibility and
+    reusability to analyze fractions of pipelines in low cost").
+ 2. Execute the remaining modules, timing each (block_until_ready).
+ 3. Store whatever the policy admits — optionally gated by the Eq. 4.9 cost
+    test (admission="t1_gt_t2").
+ 4. On module failure, persist the last good intermediate state so a resumed
+    run restarts at the failure point (thesis Ch. 3.5.2 error recovery).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax
+
+from .cost import CostModel
+from .provenance import ProvenanceLog, RunRecord
+from .risp import Recommendation, StoragePolicy, StoredRecord
+from .store import IntermediateStore
+from .workflow import ModuleRef, ModuleSpec, PrefixKey, Workflow
+
+
+class WorkflowError(RuntimeError):
+    def __init__(self, message: str, workflow: Workflow, failed_at: int, cause: Exception):
+        super().__init__(message)
+        self.workflow = workflow
+        self.failed_at = failed_at  # 0-based module index that failed
+        self.cause = cause
+
+
+@dataclass
+class RunResult:
+    output: Any
+    workflow: Workflow
+    module_seconds: list[float]
+    reused_prefix: PrefixKey | None
+    load_seconds: float
+    stored_keys: list[str]
+    store_seconds: float
+    total_seconds: float
+    n_skipped: int
+    recovered_from_depth: int = 0
+
+    @property
+    def exec_seconds(self) -> float:
+        return sum(self.module_seconds)
+
+
+def _nbytes(value: Any) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(value):
+        total += getattr(leaf, "nbytes", 0) or 0
+    return int(total)
+
+
+@dataclass
+class WorkflowExecutor:
+    store: IntermediateStore
+    policy: StoragePolicy
+    registry: dict[str, ModuleSpec] = field(default_factory=dict)
+    admission: str = "always"  # "always" | "t1_gt_t2"
+    provenance: ProvenanceLog | None = None
+    cost_model: CostModel | None = None
+
+    def __post_init__(self) -> None:
+        if self.cost_model is None:
+            self.cost_model = CostModel(store=self.store)
+        if self.admission not in ("always", "t1_gt_t2"):
+            raise ValueError(f"unknown admission mode {self.admission!r}")
+
+    # -- registration ---------------------------------------------------------
+    def register(self, spec: ModuleSpec) -> None:
+        self.registry[spec.module_id] = spec
+
+    def register_fn(self, module_id: str, fn, **default_params) -> None:
+        self.register(ModuleSpec(module_id, fn, default_params))
+
+    # -- workflow construction -------------------------------------------------
+    def make_workflow(
+        self,
+        dataset_id: str,
+        steps: Sequence[str | tuple[str, Mapping[str, Any] | None]],
+        workflow_id: str = "",
+    ) -> Workflow:
+        refs = []
+        for step in steps:
+            if isinstance(step, str):
+                mod, params = step, None
+            else:
+                mod, params = step
+            spec = self.registry[mod]
+            refs.append(spec.ref(params))
+        return Workflow(dataset_id, tuple(refs), workflow_id)
+
+    # -- execution --------------------------------------------------------------
+    def run(
+        self,
+        dataset_id: str,
+        data: Any,
+        steps: Sequence[str | tuple[str, Mapping[str, Any] | None]],
+        workflow_id: str = "",
+    ) -> RunResult:
+        wf = self.make_workflow(dataset_id, steps, workflow_id)
+        return self.run_workflow(wf, data)
+
+    def _params_for(self, ref: ModuleRef) -> dict[str, Any]:
+        spec = self.registry[ref.module_id]
+        params = dict(spec.default_params)
+        params.update({k: eval_repr(v) for k, v in ref.state.params})
+        return params
+
+    def run_workflow(self, wf: Workflow, data: Any) -> RunResult:
+        t_start = time.perf_counter()
+        rec: Recommendation = self.policy.step(wf)
+
+        # 1) reuse the longest stored prefix whose artifact still exists
+        reused: PrefixKey | None = None
+        load_s = 0.0
+        start_idx = 0
+        value = data
+        candidate = rec.reuse
+        while candidate is not None:
+            key = candidate.key(self.policy.with_state)
+            if self.store.has(key):
+                t0 = time.perf_counter()
+                value = self.store.get(key)
+                load_s = time.perf_counter() - t0
+                reused = candidate
+                start_idx = candidate.depth
+                break
+            # artifact evicted: drop stale bookkeeping, try shorter prefix
+            self.policy.stored.pop(key, None)
+            candidate = candidate.parent()
+
+        # 2) execute the suffix, retaining stage outputs for storing
+        module_seconds = [0.0] * len(wf)
+        stage_values: dict[int, Any] = {}  # depth -> value (1-based)
+        failed_at: int | None = None
+        for i in range(start_idx, len(wf)):
+            ref = wf.modules[i]
+            spec = self.registry[ref.module_id]
+            params = self._params_for(ref)
+            t0 = time.perf_counter()
+            try:
+                value = spec.fn(value, **params)
+                value = jax.block_until_ready(value)
+            except Exception as e:  # noqa: BLE001 - module code is user code
+                failed_at = i
+                self._persist_recovery_point(wf, i, stage_values, reused)
+                raise WorkflowError(
+                    f"module {ref.module_id} failed at step {i}: {e}", wf, i, e
+                ) from e
+            dt = time.perf_counter() - t0
+            module_seconds[i] = dt
+            assert self.cost_model is not None
+            self.cost_model.observe(ref, dt, _nbytes(value))
+            stage_values[i + 1] = value
+
+        # 3) store what the policy admitted (cost-gated if requested)
+        stored_keys: list[str] = []
+        store_s = 0.0
+        for prefix in rec.store:
+            depth = prefix.depth
+            if depth not in stage_values:
+                continue  # inside the skipped prefix: already stored previously
+            if self.admission == "t1_gt_t2":
+                assert self.cost_model is not None
+                measured = sum(module_seconds[:depth])
+                if not self.cost_model.should_store(prefix, measured or None):
+                    self.policy.stored.pop(prefix.key(self.policy.with_state), None)
+                    continue
+            key = prefix.key(self.policy.with_state)
+            res = self.store.put(key, stage_values[depth])
+            store_s += res.seconds
+            stored_keys.append(key)
+
+        total = time.perf_counter() - t_start
+        result = RunResult(
+            output=value,
+            workflow=wf,
+            module_seconds=module_seconds,
+            reused_prefix=reused,
+            load_seconds=load_s,
+            stored_keys=stored_keys,
+            store_seconds=store_s,
+            total_seconds=total,
+            n_skipped=start_idx,
+        )
+        if self.provenance is not None:
+            n_requests = (len(wf) - start_idx) + len(stored_keys) + (1 if reused else 0)
+            self.provenance.append(
+                RunRecord(
+                    workflow_id=wf.workflow_id,
+                    dataset_id=wf.dataset_id,
+                    modules=[m.key(True) for m in wf.modules],
+                    module_seconds=module_seconds,
+                    reused_prefix_depth=start_idx,
+                    load_seconds=load_s,
+                    stored_keys=stored_keys,
+                    store_seconds=store_s,
+                    total_seconds=total,
+                    n_requests=n_requests,
+                    failed_at=failed_at,
+                    recovered_from_depth=start_idx if reused else 0,
+                )
+            )
+        return result
+
+    # -- error recovery -----------------------------------------------------------
+    def _persist_recovery_point(
+        self,
+        wf: Workflow,
+        failed_idx: int,
+        stage_values: dict[int, Any],
+        reused: PrefixKey | None,
+    ) -> None:
+        """Store the last good intermediate state so a retry skips to it."""
+        depth = failed_idx  # output of module failed_idx-1 has depth failed_idx
+        if depth in stage_values:
+            prefix = wf.prefix(depth)
+            key = prefix.key(self.policy.with_state)
+            if not self.store.has(key):
+                self.store.put(key, stage_values[depth])
+            self.policy.stored.setdefault(
+                key, StoredRecord(prefix, self.policy.n_pipelines)
+            )
+        # if nothing was computed yet, the reused prefix (if any) already covers it
+
+
+def eval_repr(v: str) -> Any:
+    """Inverse of the repr() applied in ToolState.from_config for plain types."""
+    import ast
+
+    try:
+        return ast.literal_eval(v)
+    except (ValueError, SyntaxError):
+        return v

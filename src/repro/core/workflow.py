@@ -1,0 +1,160 @@
+"""Workflow data model: Modules, ToolStates, Workflows, and prefix keys.
+
+Mirrors the thesis' formalization (Ch. 6.3.1):
+
+    W = (D, M, E, ID, O)  — input dataset D, modules M, edges E, intermediate
+    data ID, output O.  A module is m => <id, I, O, C, S, T, Id> where C is the
+    parameter-configuration set and T the tool state.
+
+For rule mining the thesis treats pipelines as *sequential* module chains
+(Ch. 3.3: "For simplicity we are considering only sequential module processing
+in workflows"); general DAGs are decomposed into root-to-node paths.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Mapping, Sequence
+
+
+def _stable_hash(obj: Any) -> str:
+    """SHA-256 of a canonical-JSON rendering; used for tool states & datasets."""
+    payload = json.dumps(obj, sort_keys=True, default=repr).encode()
+    return hashlib.sha256(payload).hexdigest()[:16]
+
+
+@dataclass(frozen=True)
+class ToolState:
+    """Parameter configuration of a module (thesis Ch. 5: 'tool state').
+
+    Two invocations of the same module with different parameter sets are
+    different tool states and must not share intermediate data.
+    """
+
+    params: tuple[tuple[str, str], ...] = ()
+
+    @classmethod
+    def from_config(cls, config: Mapping[str, Any] | None) -> "ToolState":
+        if not config:
+            return cls()
+        items = tuple(sorted((str(k), repr(v)) for k, v in config.items()))
+        return cls(items)
+
+    @property
+    def digest(self) -> str:
+        return _stable_hash(self.params) if self.params else "default"
+
+    def __str__(self) -> str:  # pragma: no cover - debug aid
+        return self.digest
+
+
+@dataclass(frozen=True)
+class ModuleRef:
+    """A module occurrence inside a workflow: id + tool state."""
+
+    module_id: str
+    state: ToolState = field(default_factory=ToolState)
+
+    def key(self, with_state: bool) -> str:
+        return f"{self.module_id}@{self.state.digest}" if with_state else self.module_id
+
+
+@dataclass(frozen=True)
+class Workflow:
+    """A sequential pipeline applied to one input dataset."""
+
+    dataset_id: str
+    modules: tuple[ModuleRef, ...]
+    workflow_id: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.modules:
+            raise ValueError("a workflow needs at least one module")
+
+    @classmethod
+    def build(
+        cls,
+        dataset_id: str,
+        steps: Sequence[str | tuple[str, Mapping[str, Any] | None]],
+        workflow_id: str = "",
+    ) -> "Workflow":
+        refs = []
+        for step in steps:
+            if isinstance(step, str):
+                refs.append(ModuleRef(step))
+            else:
+                mod, cfg = step
+                refs.append(ModuleRef(mod, ToolState.from_config(cfg)))
+        return cls(dataset_id, tuple(refs), workflow_id)
+
+    def __len__(self) -> int:
+        return len(self.modules)
+
+    def prefixes(self) -> Iterator["PrefixKey"]:
+        """All prefixes D=>[M1..Mk], k=1..n — one per storable intermediate state.
+
+        The thesis derives one association rule per storable result including
+        the final one (Ch. 4.3.1: 4 rules from a 4-module pipeline).
+        """
+        for k in range(1, len(self.modules) + 1):
+            yield self.prefix(k)
+
+    def prefix(self, k: int) -> "PrefixKey":
+        if not 1 <= k <= len(self.modules):
+            raise IndexError(f"prefix length {k} out of range 1..{len(self.modules)}")
+        return PrefixKey(self.dataset_id, self.modules[:k])
+
+    @property
+    def n_intermediate_states(self) -> int:
+        """Storable states incl. the final result (thesis counts both)."""
+        return len(self.modules)
+
+
+@dataclass(frozen=True)
+class PrefixKey:
+    """Canonical identity of an intermediate state: dataset + module prefix.
+
+    ``key(with_state=True)`` is the *adaptive RISP* identity (Ch. 5) — it
+    includes each module's tool-state digest; ``with_state=False`` is the plain
+    Ch. 4 identity.
+    """
+
+    dataset_id: str
+    modules: tuple[ModuleRef, ...]
+
+    def key(self, with_state: bool = False) -> str:
+        mods = ">".join(m.key(with_state) for m in self.modules)
+        return f"{self.dataset_id}::{mods}"
+
+    def __len__(self) -> int:
+        return len(self.modules)
+
+    @property
+    def depth(self) -> int:
+        return len(self.modules)
+
+    def parent(self) -> "PrefixKey | None":
+        if len(self.modules) == 1:
+            return None
+        return PrefixKey(self.dataset_id, self.modules[:-1])
+
+
+@dataclass
+class ModuleSpec:
+    """An executable module registered with the SWfMS executor.
+
+    ``fn`` maps (input pytree, **params) -> output pytree. ``cost_hint``
+    optionally estimates seconds for scheduling/reporting.
+    """
+
+    module_id: str
+    fn: Callable[..., Any]
+    default_params: dict[str, Any] = field(default_factory=dict)
+    cost_hint: float | None = None
+
+    def ref(self, params: Mapping[str, Any] | None = None) -> ModuleRef:
+        merged = dict(self.default_params)
+        if params:
+            merged.update(params)
+        return ModuleRef(self.module_id, ToolState.from_config(merged))

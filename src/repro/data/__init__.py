@@ -1,0 +1,4 @@
+from .synthetic import make_batch
+from .graph import NeighborSampler, random_graph
+
+__all__ = ["make_batch", "NeighborSampler", "random_graph"]

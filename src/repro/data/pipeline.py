@@ -1,0 +1,58 @@
+"""LM data-preparation pipeline as SWfMS modules (RISP-cacheable stages).
+
+The thesis' technique applies to *data* workflows first and foremost: the
+tokenize -> pack -> split stages below register with the WorkflowExecutor, so
+repeated training runs over the same corpus reuse the packed token shards
+instead of re-preprocessing (DESIGN §4 table, LM row).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..core import ModuleSpec, WorkflowExecutor
+
+
+def byte_tokenize(text_blob: jnp.ndarray, vocab: int = 32000) -> jnp.ndarray:
+    """Toy byte-pair-ish tokenizer: fold bytes into the model vocab."""
+    b = jnp.asarray(text_blob, jnp.uint32)
+    pairs = b[: (b.shape[0] // 2) * 2].reshape(-1, 2)
+    ids = (pairs[:, 0] * 311 + pairs[:, 1] * 7) % vocab
+    return ids.astype(jnp.int32)
+
+
+def pack_sequences(ids: jnp.ndarray, seq_len: int = 128) -> jnp.ndarray:
+    """Pack the token stream into [n, seq_len+1] rows (input+target)."""
+    n = ids.shape[0] // (seq_len + 1)
+    return ids[: n * (seq_len + 1)].reshape(n, seq_len + 1)
+
+
+def train_split(packed: jnp.ndarray, holdout: int = 8) -> dict:
+    return {"train": packed[:-holdout], "eval": packed[-holdout:]}
+
+
+def register_data_modules(ex: WorkflowExecutor, vocab: int = 32000) -> None:
+    ex.register(
+        ModuleSpec(
+            "tokenize",
+            lambda blob, vocab=vocab: byte_tokenize(blob, vocab),
+            {"vocab": vocab},
+        )
+    )
+    ex.register(
+        ModuleSpec(
+            "pack", lambda ids, seq_len=128: pack_sequences(ids, seq_len),
+            {"seq_len": 128},
+        )
+    )
+    ex.register(
+        ModuleSpec(
+            "split", lambda p, holdout=8: train_split(p, holdout), {"holdout": 8}
+        )
+    )
+
+
+def make_corpus_blob(n_bytes: int = 1 << 20, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 256, size=n_bytes, dtype=np.uint32))

@@ -1,0 +1,38 @@
+"""jit'd wrapper for the decode attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,  # [B, Hq, d] — single query token per sequence
+    k_cache: jax.Array,  # [B, T, Hkv, d]
+    v_cache: jax.Array,
+    lens: jax.Array,  # [B] valid cache length incl. current token
+    *,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Hq, d = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    block_k = min(block_k, T)
+    pad = (-T) % block_k
+    if pad:
+        widths = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+    qg = q.reshape(B, Hkv, G, d)
+    out = decode_attention_kernel(
+        qg, k_cache, v_cache, lens.astype(jnp.int32),
+        block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(B, Hq, d)

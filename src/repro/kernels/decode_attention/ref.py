@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for cached decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, Hkv, G, d]
+    k_cache: jax.Array,  # [B, T, Hkv, d]
+    v_cache: jax.Array,
+    lens: jax.Array,  # [B]
+) -> jax.Array:
+    B, Hkv, G, d = q.shape
+    T = k_cache.shape[1]
+    s = jnp.einsum("bkgd,btkd->bkgt", q, k_cache).astype(jnp.float32) / jnp.sqrt(d)
+    mask = jnp.arange(T)[None, :] < lens[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v_cache)

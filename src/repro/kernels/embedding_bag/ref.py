@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: EmbeddingBag via take + weighted sum (segment form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jax.Array,  # [V, dim]
+    ids: jax.Array,  # [n_bags, bag_size]
+    weights: jax.Array | None = None,  # [n_bags, bag_size]
+    combiner: str = "sum",
+) -> jax.Array:
+    rows = jnp.take(table, ids, axis=0).astype(jnp.float32)  # fp32 accumulate
+    if weights is not None:
+        rows = rows * weights[..., None].astype(jnp.float32)
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        out = out / ids.shape[1]
+    return out.astype(table.dtype)

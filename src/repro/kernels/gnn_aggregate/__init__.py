@@ -1,0 +1,4 @@
+from .ops import gnn_aggregate
+from .ref import edge_to_padded, gnn_aggregate_ref
+
+__all__ = ["gnn_aggregate", "gnn_aggregate_ref", "edge_to_padded"]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: padded-neighbour gated aggregation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gnn_aggregate_ref(h: jax.Array, nbr: jax.Array, gates: jax.Array) -> jax.Array:
+    rows = jnp.take(h, nbr, axis=0).astype(jnp.float32)  # [N, deg, dim]
+    return (rows * gates.astype(jnp.float32)).sum(axis=1).astype(h.dtype)
+
+
+def edge_to_padded(
+    edge_index, eta, n_nodes: int, max_deg: int
+):
+    """Convert COO (src,dst) edges + per-edge gates to the padded-ELL layout
+    the kernel consumes.  numpy host-side prep (data-pipeline stage)."""
+    import numpy as np
+
+    src, dst = np.asarray(edge_index)
+    eta = np.asarray(eta)
+    nbr = np.zeros((n_nodes, max_deg), np.int32)
+    gates = np.zeros((n_nodes, max_deg, eta.shape[-1]), eta.dtype)
+    fill = np.zeros(n_nodes, np.int32)
+    for e in range(src.shape[0]):
+        d = dst[e]
+        if fill[d] < max_deg:
+            nbr[d, fill[d]] = src[e]
+            gates[d, fill[d]] = eta[e]
+            fill[d] += 1
+    return nbr, gates

@@ -1,0 +1,2 @@
+"""Model zoo: transformers (dense/MoE/MLA/local-global), GatedGCN, recsys."""
+from . import attention, gnn, layers, moe, recsys, transformer  # noqa: F401

@@ -1,0 +1,232 @@
+"""Attention variants (XLA path): GQA full/causal/local, MLA, cached decode.
+
+These pure-jnp implementations are the default lowering path (and the oracle
+for the Pallas kernels in ``repro.kernels``).  Models switch to the Pallas
+flash kernels on TPU via ``attention_impl="pallas"``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: [B,S,Hkv,G,dh]  k: [B,T,Hkv,dh] -> scores [B,Hkv,G,S,T]."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k)
+
+
+def gqa_attention(
+    q: jax.Array,  # [B,S,Hq,dh]
+    k: jax.Array,  # [B,T,Hkv,dh]
+    v: jax.Array,  # [B,T,Hkv,dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    global_flag: jax.Array | None = None,
+) -> jax.Array:
+    """``window`` restricts attention to a sliding window; a traced
+    ``global_flag`` (0.0/1.0 per layer, e.g. gemma3's 5:1 pattern) disables
+    the window when 1 so local and global layers share one scan body."""
+    B, S, Hq, dh = q.shape
+    _, T, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, dh)
+    scores = _gqa_scores(qg, k).astype(jnp.float32) / jnp.sqrt(dh).astype(jnp.float32)
+
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        in_window = kpos[None, :] > qpos[:, None] - window
+        if global_flag is not None:
+            in_window = in_window | (global_flag > 0.5)
+        mask &= in_window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hq, v.shape[-1])  # v_dim may differ from q (MLA)
+
+
+def decode_attention(
+    q: jax.Array,  # [B,S,Hq,dh]  (S=1 decode; S=chunk for chunked prefill)
+    k_cache: jax.Array,  # [B,T,Hkv,dh]  (new kv already inserted)
+    v_cache: jax.Array,
+    q_start: jax.Array,  # [B] position of the FIRST query token
+    *,
+    window: int | None = None,
+    global_flag: jax.Array | None = None,
+) -> jax.Array:
+    """Cached attention: query token s attends kpos <= q_start+s."""
+    B, S, Hq, dh = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    kpos = jnp.arange(T)
+    qpos = q_start[:, None] + jnp.arange(S)[None, :]  # [B,S]
+    mask = kpos[None, None, :] <= qpos[:, :, None]  # [B,S,T]
+    if window is not None:
+        in_window = kpos[None, None, :] > qpos[:, :, None] - window
+        if global_flag is not None:
+            in_window = in_window | (global_flag > 0.5)
+        mask &= in_window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache)
+    return out.reshape(B, S, Hq, v_cache.shape[-1])
+
+
+def chunked_gqa_attention(
+    q: jax.Array,  # [B,S,Hq,dh]
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    global_flag: jax.Array | None = None,
+    block_q: int = 256,
+) -> jax.Array:
+    """Q-chunked attention with per-chunk rematerialization: the S x T score
+    matrix never materializes beyond one (block_q x T) tile, and backward
+    recomputes per chunk — the XLA-level analogue of the Pallas flash kernel
+    (which replaces this on real TPU).  Peak score memory drops S/block_q x.
+    """
+    B, S, Hq, dh = q.shape
+    if S <= block_q:
+        return gqa_attention(
+            q, k, v, causal=causal, window=window, global_flag=global_flag
+        )
+    pad = (-S) % block_q
+    qp = jnp.pad(q, [(0, 0), (0, pad), (0, 0), (0, 0)]) if pad else q
+    nb = qp.shape[1] // block_q
+    qb = jnp.moveaxis(qp.reshape(B, nb, block_q, Hq, dh), 1, 0)  # [nb,B,blk,H,dh]
+    offsets = jnp.arange(nb) * block_q
+
+    def body(_, xs):
+        q_chunk, off = xs
+        out = gqa_attention(
+            q_chunk,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            q_offset=off,
+            global_flag=global_flag,
+        )
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None, (qb, offsets))
+    v_dim = outs.shape[-1]  # may differ from q's head dim (MLA)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nb * block_q, Hq, v_dim)
+    return out[:, :S]
+
+
+def insert_chunk(cache: jax.Array, new: jax.Array, cache_len: jax.Array) -> jax.Array:
+    """Scatter new [B,c,...] into cache [B,T,...] at positions cache_len+j."""
+    B, T = cache.shape[:2]
+    c = new.shape[1]
+    kpos = jnp.arange(T)
+    oh = (
+        kpos[None, :, None] == (cache_len[:, None, None] + jnp.arange(c)[None, None, :])
+    ).astype(cache.dtype)
+    return cache + jnp.einsum("btc,bc...->bt...", oh, new)
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2, arXiv:2405.04434) — with the absorbed-matmul decode path
+# --------------------------------------------------------------------------
+def mla_prefill(
+    x: jax.Array,  # [B,S,d]
+    p: dict,
+    *,
+    n_heads: int,
+    nope: int,
+    rope: int,
+    v_dim: int,
+    positions: jax.Array,
+    theta: float,
+    causal: bool = True,
+    attn_impl: str = "einsum",
+    block_q: int = 512,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (attn_out [B,S,H*v_dim], c_kv [B,S,r], k_rope [B,S,rope])."""
+    B, S, _ = x.shape
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])  # e = nope+rope
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # r = kv_lora + rope
+    c_kv, k_rope = ckv_full[..., :-rope], ckv_full[..., -rope:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta)[:, :, 0, :]
+
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"])  # [B,S,H,nope]
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"])  # [B,S,H,v_dim]
+
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, n_heads, rope))],
+        axis=-1,
+    )
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if attn_impl == "chunked":
+        out = chunked_gqa_attention(qf, k, v, causal=causal, block_q=block_q)
+    else:
+        out = gqa_attention(qf, k, v, causal=causal)
+    return out.reshape(B, S, n_heads * v_dim), c_kv, k_rope
+
+
+def mla_decode(
+    x: jax.Array,  # [B,S,d]  (S=1 decode; S=chunk for chunked prefill)
+    p: dict,
+    c_kv_cache: jax.Array,  # [B,T,r]   (new latents already inserted)
+    k_rope_cache: jax.Array,  # [B,T,rope]
+    q_start: jax.Array,  # [B] position of the FIRST query token
+    *,
+    n_heads: int,
+    nope: int,
+    rope: int,
+    v_dim: int,
+    positions: jax.Array,  # [B,S]
+    theta: float,
+) -> jax.Array:
+    """Absorbed-matmul cached attention: scores live in the latent space, the
+    cache is only the rank-r latent + shared rope key — the MLA memory win.
+    Query token s (global position q_start+s) attends kpos <= q_start+s."""
+    B, S, _ = x.shape
+    T = c_kv_cache.shape[1]
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, theta)
+
+    # absorb w_uk into the query: q_lat [B,S,H,r]
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, c_kv_cache)
+    scores = scores + jnp.einsum("bshe,bte->bhst", q_rope, k_rope_cache)
+    scores = scores.astype(jnp.float32) / jnp.sqrt(nope + rope).astype(jnp.float32)
+
+    kpos = jnp.arange(T)
+    qpos = q_start[:, None] + jnp.arange(S)[None, :]  # [B,S]
+    mask = kpos[None, None, :] <= qpos[:, :, None]  # [B,S,T]
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv_cache)  # [B,S,H,r]
+    v = jnp.einsum("bshr,rhe->bshe", ctx_lat, p["w_uv"])  # [B,S,H,v_dim]
+    return v.reshape(B, S, n_heads * v_dim)
+
+
+def insert_kv(cache: jax.Array, new: jax.Array, cache_len: jax.Array) -> jax.Array:
+    """Scatter new [B,1,...] into cache [B,T,...] at position cache_len[B]."""
+    T = cache.shape[1]
+    onehot = (jnp.arange(T)[None] == cache_len[:, None]).astype(cache.dtype)
+    shape = (cache.shape[0], T) + (1,) * (cache.ndim - 2)
+    return cache + onehot.reshape(shape) * new

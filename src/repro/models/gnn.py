@@ -1,0 +1,132 @@
+"""GatedGCN (arXiv:1711.07553 / benchmarking-GNNs arXiv:2003.00982).
+
+Message passing via ``jax.ops.segment_sum`` over an edge-index -> node
+scatter (JAX sparse is BCOO-only; the segment-op formulation IS the system's
+SpMM layer).  Layer update (with edge features, residuals, and norm):
+
+    e'_ij = e_ij + ReLU(Norm(A h_i + B h_j + C e_ij))
+    eta_ij = sigma(e'_ij) / (sum_j sigma(e'_ij) + eps)
+    h'_i  = h_i + ReLU(Norm(U h_i + sum_j eta_ij * (V h_j)))
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import GNNConfig
+from .layers import PSpec, layer_norm
+
+
+def gnn_specs(cfg: GNNConfig, d_feat: int) -> dict:
+    L, h, de = cfg.n_layers, cfg.d_hidden, cfg.d_edge
+    return {
+        "node_encoder": PSpec((d_feat, h), ("node_feat", "hidden")),
+        "edge_encoder": PSpec((de, h), ("edge_feat", "hidden")),
+        "layers": {
+            "A": PSpec((L, h, h), ("layers", "hidden", "hidden")),
+            "B": PSpec((L, h, h), ("layers", "hidden", "hidden")),
+            "C": PSpec((L, h, h), ("layers", "hidden", "hidden")),
+            "U": PSpec((L, h, h), ("layers", "hidden", "hidden")),
+            "V": PSpec((L, h, h), ("layers", "hidden", "hidden")),
+            "ln_h_scale": PSpec((L, h), ("layers", "hidden"), init="ones"),
+            "ln_h_bias": PSpec((L, h), ("layers", "hidden"), init="zeros"),
+            "ln_e_scale": PSpec((L, h), ("layers", "hidden"), init="ones"),
+            "ln_e_bias": PSpec((L, h), ("layers", "hidden"), init="zeros"),
+        },
+        "readout": PSpec((h, cfg.n_classes), ("hidden", "classes")),
+    }
+
+
+def _gated_layer(p: dict, h: jax.Array, e: jax.Array, src: jax.Array, dst: jax.Array):
+    n = h.shape[0]
+    h_src = jnp.take(h, src, axis=0)
+    h_dst = jnp.take(h, dst, axis=0)
+    e_new = (
+        jnp.einsum("ed,df->ef", h_dst, p["A"])
+        + jnp.einsum("ed,df->ef", h_src, p["B"])
+        + jnp.einsum("ed,df->ef", e, p["C"])
+    )
+    e_new = jax.nn.relu(layer_norm(e_new, p["ln_e_scale"], p["ln_e_bias"]))
+    e = e + e_new
+
+    eta = jax.nn.sigmoid(e)
+    msg = eta * jnp.einsum("ed,df->ef", h_src, p["V"])
+    num = jax.ops.segment_sum(msg, dst, num_segments=n)
+    den = jax.ops.segment_sum(eta, dst, num_segments=n) + 1e-6
+    agg = num / den
+    h_new = jnp.einsum("nd,df->nf", h, p["U"]) + agg
+    h_new = jax.nn.relu(layer_norm(h_new, p["ln_h_scale"], p["ln_h_bias"]))
+    return h + h_new, e
+
+
+def forward(
+    params: dict,
+    cfg: GNNConfig,
+    node_feat: jax.Array,  # [N, d_feat]
+    edge_index: jax.Array,  # [2, E] (src, dst)
+    *,
+    unroll: int = 1,
+    remat=None,
+) -> jax.Array:
+    """Returns per-node class logits [N, n_classes]."""
+    src, dst = edge_index[0], edge_index[1]
+    h = jnp.einsum("nd,df->nf", node_feat.astype(cfg.dtype), params["node_encoder"])
+    # edge features: encoded from a constant when the dataset has none
+    e = jnp.ones((src.shape[0], cfg.d_edge), cfg.dtype) @ params["edge_encoder"]
+
+    def _constrain(h, e):
+        if not (cfg.act_node_axes or cfg.act_edge_axes):
+            return h, e
+        from jax.sharding import PartitionSpec as P
+
+        if cfg.act_node_axes:
+            h = jax.lax.with_sharding_constraint(h, P(tuple(cfg.act_node_axes), None))
+        if cfg.act_edge_axes:
+            e = jax.lax.with_sharding_constraint(e, P(tuple(cfg.act_edge_axes), None))
+        return h, e
+
+    def body(carry, layer_p):
+        h, e = carry
+        h, e = _gated_layer(layer_p, h, e, src, dst)
+        return _constrain(h, e), None
+
+    if remat is not None:
+        body = jax.checkpoint(body, policy=remat)
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"], unroll=unroll)
+    return jnp.einsum("nf,fc->nc", h, params["readout"]).astype(jnp.float32)
+
+
+def forward_batched(
+    params: dict,
+    cfg: GNNConfig,
+    node_feat: jax.Array,  # [B, n, d]
+    edge_index: jax.Array,  # [B, 2, e]
+) -> jax.Array:
+    """Batched small graphs (molecule cell): vmap over the batch, then mean-
+    pool nodes for a graph-level prediction."""
+
+    def single(nf, ei):
+        logits = forward(params, cfg, nf, ei)
+        return logits.mean(axis=0)
+
+    return jax.vmap(single)(node_feat, edge_index)
+
+
+def loss_fn(
+    params: dict,
+    cfg: GNNConfig,
+    node_feat: jax.Array,
+    edge_index: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array | None = None,
+    remat=None,
+) -> jax.Array:
+    logits = forward(params, cfg, node_feat, edge_index, remat=remat)
+    ce = -jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), labels[:, None], axis=-1
+    )[:, 0]
+    if mask is not None:
+        return (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce.mean()

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN: shared + routed top-k, GSPMD-friendly dispatch.
+
+TPU adaptation: the grouped GShard/Switch einsum formulation — tokens are
+reshaped into groups, a capacity-bounded one-hot dispatch tensor routes each
+token to its top-k experts, and expert FFNs run as one stacked einsum over the
+expert dimension.  Expert parallelism falls out of sharding the expert dim of
+the weights ("experts" logical axis); the dispatch/combine einsums become the
+all-to-alls.  Capacity factor bounds the dispatch tensor to O(k*T*g) — linear
+in tokens (the ungrouped formulation is quadratic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoESpec
+from .layers import PSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    top_k: int
+    n_shared: int
+    d_model: int
+    d_ff: int
+    group_size: int = 1024
+    capacity_factor: float = 1.25
+    # optional explicit EP annotations (mesh axis names) — forces GSPMD to
+    # reshard tokens->experts as an all-to-all at the dispatch boundary
+    ep_axis: str | None = None
+    token_axes: tuple = ()
+
+    def capacity(self, group_size: int) -> int:
+        c = int(math.ceil(self.top_k * group_size / self.n_experts * self.capacity_factor))
+        return max(c, 4)
+
+
+def moe_specs(spec: MoESpec, d_model: int, n_layers: int) -> dict:
+    E, f = spec.n_experts, spec.d_ff_expert
+    d = d_model
+    L = n_layers
+    out = {
+        "router": PSpec((L, d, E), ("layers", "embed", "experts_r")),
+        "w_gate": PSpec((L, E, d, f), ("layers", "experts", "embed", "expert_ff")),
+        "w_up": PSpec((L, E, d, f), ("layers", "experts", "embed", "expert_ff")),
+        "w_down": PSpec((L, E, f, d), ("layers", "experts", "expert_ff", "embed")),
+    }
+    if spec.n_shared:
+        fs = spec.d_ff_expert * spec.n_shared
+        out["shared"] = {
+            "w_gate": PSpec((L, d, fs), ("layers", "embed", "ff")),
+            "w_up": PSpec((L, d, fs), ("layers", "embed", "ff")),
+            "w_down": PSpec((L, fs, d), ("layers", "ff", "embed")),
+        }
+    return out
+
+
+def moe_ffn(x: jax.Array, p: dict, dims: MoEDims) -> jax.Array:
+    """x: [B,S,d] -> [B,S,d].  p holds one layer's slices (no leading L)."""
+    B, S, d = x.shape
+    E, K = dims.n_experts, dims.top_k
+    g = min(dims.group_size, B * S)
+    T = B * S
+    assert T % g == 0, (T, g)
+    G = T // g
+    C = dims.capacity(g)
+
+    xt = x.reshape(G, g, d)
+    logits = jnp.einsum("Ggd,dE->GgE", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)  # [G,g,K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # capacity-bounded positions, priority by k (GShard top-k dispatch)
+    dispatch = jnp.zeros((G, g, E, C), dtype=x.dtype)
+    combine = jnp.zeros((G, g, E, C), dtype=x.dtype)
+    prior_count = jnp.zeros((G, 1, E), dtype=jnp.int32)
+    for k in range(K):
+        mask_k = jax.nn.one_hot(idx[..., k], E, dtype=jnp.int32)  # [G,g,E]
+        pos_k = jnp.cumsum(mask_k, axis=1) - 1 + prior_count  # [G,g,E]
+        prior_count = prior_count + mask_k.sum(axis=1, keepdims=True)
+        keep = (pos_k < C) & (mask_k > 0)
+        oh = jax.nn.one_hot(jnp.where(keep, pos_k, C), C, dtype=x.dtype)
+        d_k = oh * keep.astype(x.dtype)[..., None]  # [G,g,E,C]
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gates[..., k, None, None].astype(x.dtype)
+
+    def _ep_constraint(t):
+        if dims.ep_axis is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(dims.ep_axis, dims.token_axes or None, *([None] * (t.ndim - 2)))
+        return jax.lax.with_sharding_constraint(t, spec)
+
+    expert_in = _ep_constraint(jnp.einsum("GgEC,Ggd->EGCd", dispatch, xt))
+    h = jax.nn.silu(jnp.einsum("EGCd,Edf->EGCf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("EGCd,Edf->EGCf", expert_in, p["w_up"])
+    expert_out = _ep_constraint(jnp.einsum("EGCf,Efd->EGCd", h, p["w_down"]))
+    y = jnp.einsum("GgEC,EGCd->Ggd", combine, expert_out)
+
+    out = y.reshape(B, S, d)
+    if "shared" in p:
+        sp = p["shared"]
+        gsh = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sp["w_gate"]))
+        ush = jnp.einsum("bsd,df->bsf", x, sp["w_up"])
+        out = out + jnp.einsum("bsf,fd->bsd", gsh * ush, sp["w_down"])
+    return out
+
+
+def aux_load_balance_loss(logits: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    density = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    density_proxy = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return n_experts * jnp.sum(density * density_proxy)

@@ -1,0 +1,233 @@
+"""RecSys models: FM, DCN-v2, BST, SASRec on a shared embedding substrate.
+
+The hot path is the sparse embedding lookup: JAX has no native EmbeddingBag,
+so lookups are ``jnp.take`` + ``jax.ops.segment_sum`` (layers.embedding_bag)
+— this IS part of the system.  Tables use one logical "table_vocab" axis so
+the sharding rules row-shard them across the model axis.
+
+Retrieval scoring (``retrieval_cand``): one query against 10^6 candidates as
+a batched dot against the candidate-embedding matrix — FM factorizes exactly
+(score = <sum_user v, v_cand> + w_cand + const); sequence models use their
+standard final-hidden-state-dot-item-embedding scoring; DCN-v2 uses a
+two-tower projection of its cross output (the production retrieval pattern —
+the full cross network per candidate is a ranking, not retrieval, workload).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RecsysConfig
+from .layers import PSpec, layer_norm, mlp
+
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+def _mlp_specs(d_in: int, widths: tuple[int, ...], out_dim: int = 1) -> list:
+    layers = []
+    d = d_in
+    for w in list(widths) + [out_dim]:
+        layers.append(
+            {
+                "w": PSpec((d, w), ("mlp_in", "mlp_hidden")),
+                "b": PSpec((w,), ("mlp_hidden",), init="zeros"),
+            }
+        )
+        d = w
+    return layers
+
+
+def _field_table_specs(cfg: RecsysConfig) -> PSpec:
+    """One stacked table for all sparse fields (offset-indexed rows)."""
+    total_rows = sum(cfg.vocab_sizes)
+    return PSpec((total_rows, cfg.embed_dim), ("table_vocab", "embed_dim"), scale=0.02)
+
+
+def field_offsets(cfg: RecsysConfig) -> jnp.ndarray:
+    off = [0]
+    for v in cfg.vocab_sizes[:-1]:
+        off.append(off[-1] + v)
+    return jnp.asarray(off, jnp.int32)
+
+
+def lookup_fields(table: jax.Array, cfg: RecsysConfig, sparse_ids: jax.Array):
+    """sparse_ids [B, n_fields] (per-field local ids) -> [B, n_fields, dim]."""
+    ids = sparse_ids + field_offsets(cfg)[None, :]
+    return jnp.take(table, ids, axis=0)
+
+
+# --------------------------------------------------------------------------
+# FM (Rendle ICDM'10): O(nk) sum-square trick
+# --------------------------------------------------------------------------
+def fm_specs(cfg: RecsysConfig) -> dict:
+    total_rows = sum(cfg.vocab_sizes)
+    return {
+        "table": _field_table_specs(cfg),
+        "w_linear": PSpec((total_rows,), ("table_vocab",), scale=0.01),
+        "bias": PSpec((1,), (None,), init="zeros"),
+    }
+
+
+def fm_forward(params: dict, cfg: RecsysConfig, sparse_ids: jax.Array) -> jax.Array:
+    ids = sparse_ids + field_offsets(cfg)[None, :]
+    v = jnp.take(params["table"], ids, axis=0)  # [B,F,k]
+    lin = jnp.take(params["w_linear"], ids, axis=0).sum(-1)  # [B]
+    s = v.sum(axis=1)  # [B,k]
+    pair = 0.5 * (jnp.square(s).sum(-1) - jnp.square(v).sum(axis=(1, 2)))
+    return params["bias"][0] + lin + pair
+
+
+def fm_retrieval(params: dict, cfg: RecsysConfig, sparse_ids, candidate_ids):
+    """Exact FM split: user-part constant + <sum_user v, v_c> + w_c."""
+    ids = sparse_ids + field_offsets(cfg)[None, :]
+    v_u = jnp.take(params["table"], ids, axis=0).sum(axis=1)  # [B,k]
+    v_c = jnp.take(params["table"], candidate_ids, axis=0)  # [C,k]
+    w_c = jnp.take(params["w_linear"], candidate_ids, axis=0)  # [C]
+    return jnp.einsum("bk,ck->bc", v_u, v_c) + w_c[None, :]
+
+
+# --------------------------------------------------------------------------
+# DCN-v2 (arXiv:2008.13535)
+# --------------------------------------------------------------------------
+def dcn_specs(cfg: RecsysConfig) -> dict:
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    Lc = cfg.n_cross_layers
+    return {
+        "table": _field_table_specs(cfg),
+        "cross_w": PSpec((Lc, d0, d0), ("layers", "x0", "x0")),
+        "cross_b": PSpec((Lc, d0), ("layers", "x0"), init="zeros"),
+        "mlp": _mlp_specs(d0, cfg.mlp),
+        "tower": PSpec((d0, cfg.embed_dim), ("x0", "embed_dim")),  # retrieval tower
+    }
+
+
+def dcn_embed(params: dict, cfg: RecsysConfig, dense, sparse_ids):
+    emb = lookup_fields(params["table"], cfg, sparse_ids)  # [B,F,k]
+    B = dense.shape[0]
+    return jnp.concatenate([dense, emb.reshape(B, -1)], axis=-1)
+
+
+def dcn_cross(params: dict, x0: jax.Array) -> jax.Array:
+    x = x0
+    n_layers = params["cross_w"].shape[0]
+    for l in range(n_layers):
+        x = x0 * (jnp.einsum("bd,de->be", x, params["cross_w"][l]) + params["cross_b"][l]) + x
+    return x
+
+
+def dcn_forward(params: dict, cfg: RecsysConfig, dense, sparse_ids) -> jax.Array:
+    x0 = dcn_embed(params, cfg, dense, sparse_ids)
+    x = dcn_cross(params, x0)
+    return mlp(x, params["mlp"])[:, 0]
+
+
+def dcn_retrieval(params: dict, cfg: RecsysConfig, dense, sparse_ids, candidate_ids):
+    x0 = dcn_embed(params, cfg, dense, sparse_ids)
+    u = jnp.einsum("bd,dk->bk", dcn_cross(params, x0), params["tower"])
+    v_c = jnp.take(params["table"], candidate_ids, axis=0)
+    return jnp.einsum("bk,ck->bc", u, v_c)
+
+
+# --------------------------------------------------------------------------
+# BST (arXiv:1905.06874): transformer over user behaviour sequence
+# --------------------------------------------------------------------------
+def _tf_block_specs(cfg: RecsysConfig, L: int, d: int) -> dict:
+    h = cfg.n_heads
+    dh = max(d // max(h, 1), 1)
+    return {
+        "wq": PSpec((L, d, h, dh), ("layers", "embed_dim", "heads", "head_dim")),
+        "wk": PSpec((L, d, h, dh), ("layers", "embed_dim", "heads", "head_dim")),
+        "wv": PSpec((L, d, h, dh), ("layers", "embed_dim", "heads", "head_dim")),
+        "wo": PSpec((L, h, dh, d), ("layers", "heads", "head_dim", "embed_dim")),
+        "ffn_w1": PSpec((L, d, 4 * d), ("layers", "embed_dim", "ff")),
+        "ffn_b1": PSpec((L, 4 * d), ("layers", "ff"), init="zeros"),
+        "ffn_w2": PSpec((L, 4 * d, d), ("layers", "ff", "embed_dim")),
+        "ffn_b2": PSpec((L, d), ("layers", "embed_dim"), init="zeros"),
+        "ln1_s": PSpec((L, d), ("layers", "embed_dim"), init="ones"),
+        "ln1_b": PSpec((L, d), ("layers", "embed_dim"), init="zeros"),
+        "ln2_s": PSpec((L, d), ("layers", "embed_dim"), init="ones"),
+        "ln2_b": PSpec((L, d), ("layers", "embed_dim"), init="zeros"),
+    }
+
+
+def _tf_encode(p: dict, x: jax.Array, causal: bool) -> jax.Array:
+    """x [B,S,d]; stacked blocks via scan."""
+    from .attention import gqa_attention
+
+    def body(carry, lp):
+        h = layer_norm(carry, lp["ln1_s"], lp["ln1_b"])
+        q = jnp.einsum("bsd,dhe->bshe", h, lp["wq"])
+        k = jnp.einsum("bsd,dhe->bshe", h, lp["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", h, lp["wv"])
+        a = gqa_attention(q, k, v, causal=causal)
+        carry = carry + jnp.einsum("bshe,hed->bsd", a, lp["wo"])
+        h = layer_norm(carry, lp["ln2_s"], lp["ln2_b"])
+        f = jax.nn.relu(jnp.einsum("bsd,df->bsf", h, lp["ffn_w1"]) + lp["ffn_b1"])
+        carry = carry + jnp.einsum("bsf,fd->bsd", f, lp["ffn_w2"]) + lp["ffn_b2"]
+        return carry, None
+
+    x, _ = jax.lax.scan(body, x, p)
+    return x
+
+
+def bst_specs(cfg: RecsysConfig) -> dict:
+    d = cfg.embed_dim
+    # +1 position: the target item is appended to the behaviour sequence
+    return {
+        "item_table": PSpec((cfg.item_vocab, d), ("table_vocab", "embed_dim"), scale=0.02),
+        "pos_table": PSpec((cfg.seq_len + 1, d), ("seq", "embed_dim"), scale=0.02),
+        "blocks": _tf_block_specs(cfg, cfg.n_blocks, d),
+        "mlp": _mlp_specs((cfg.seq_len + 1) * d, cfg.mlp),
+    }
+
+
+def bst_forward(params: dict, cfg: RecsysConfig, hist_ids, target_id) -> jax.Array:
+    B = hist_ids.shape[0]
+    seq = jnp.concatenate([hist_ids, target_id[:, None]], axis=1)  # [B,S+1]
+    x = jnp.take(params["item_table"], seq, axis=0) + params["pos_table"][None]
+    x = _tf_encode(params["blocks"], x, causal=False)
+    return mlp(x.reshape(B, -1), params["mlp"])[:, 0]
+
+
+def bst_retrieval(params: dict, cfg: RecsysConfig, hist_ids, candidate_ids):
+    x = jnp.take(params["item_table"], hist_ids, axis=0)
+    x = x + params["pos_table"][None, : cfg.seq_len]
+    x = _tf_encode(params["blocks"], x, causal=False)
+    u = x.mean(axis=1)  # [B,d]
+    v_c = jnp.take(params["item_table"], candidate_ids, axis=0)
+    return jnp.einsum("bd,cd->bc", u, v_c)
+
+
+# --------------------------------------------------------------------------
+# SASRec (arXiv:1808.09781)
+# --------------------------------------------------------------------------
+def sasrec_specs(cfg: RecsysConfig) -> dict:
+    d = cfg.embed_dim
+    return {
+        "item_table": PSpec((cfg.item_vocab, d), ("table_vocab", "embed_dim"), scale=0.02),
+        "pos_table": PSpec((cfg.seq_len, d), ("seq", "embed_dim"), scale=0.02),
+        "blocks": _tf_block_specs(cfg, cfg.n_blocks, d),
+        "ln_f_s": PSpec((d,), ("embed_dim",), init="ones"),
+        "ln_f_b": PSpec((d,), ("embed_dim",), init="zeros"),
+    }
+
+
+def sasrec_encode(params: dict, cfg: RecsysConfig, hist_ids) -> jax.Array:
+    x = jnp.take(params["item_table"], hist_ids, axis=0) + params["pos_table"][None]
+    x = _tf_encode(params["blocks"], x, causal=True)
+    return layer_norm(x, params["ln_f_s"], params["ln_f_b"])  # [B,S,d]
+
+
+def sasrec_forward(params: dict, cfg: RecsysConfig, hist_ids, pos_ids, neg_ids):
+    """BPR-style: score positive & negative next items from the last state."""
+    h = sasrec_encode(params, cfg, hist_ids)[:, -1]  # [B,d]
+    v_pos = jnp.take(params["item_table"], pos_ids, axis=0)
+    v_neg = jnp.take(params["item_table"], neg_ids, axis=0)
+    return jnp.einsum("bd,bd->b", h, v_pos), jnp.einsum("bd,bd->b", h, v_neg)
+
+
+def sasrec_retrieval(params: dict, cfg: RecsysConfig, hist_ids, candidate_ids):
+    h = sasrec_encode(params, cfg, hist_ids)[:, -1]
+    v_c = jnp.take(params["item_table"], candidate_ids, axis=0)
+    return jnp.einsum("bd,cd->bc", h, v_c)

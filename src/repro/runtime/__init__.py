@@ -1,0 +1,3 @@
+from .fault import InjectedFailure, TrainDriver
+
+__all__ = ["InjectedFailure", "TrainDriver"]

@@ -1,0 +1,3 @@
+from .engine import GenStats, ServeEngine
+
+__all__ = ["GenStats", "ServeEngine"]

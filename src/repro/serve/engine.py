@@ -1,0 +1,173 @@
+"""Serving engine with a RISP-guided KV-prefix cache (beyond-paper feature).
+
+The thesis' Ch. 2.5 contrasts its persistent intermediate-data store with
+web-service caching; this module closes the loop for LLM serving: a request's
+prompt is a *workflow* — the token stream chunked into fixed-size modules —
+and RISP's association mining over the request history decides which prefix
+KV states to retain.  High-confidence shared prefixes (system prompts,
+few-shot preambles) get their KV snapshot stored; later requests skip
+prefilling them.  This is RadixAttention-style prefix caching with a
+*mined admission policy* instead of cache-everything + LRU.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from ..core.risp import RISP, StoragePolicy
+from ..core.workflow import ModuleRef, Workflow
+from ..models import transformer
+
+
+def _chunk_id(tokens: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(tokens).tobytes()).hexdigest()[:12]
+
+
+@dataclass
+class GenStats:
+    prompt_len: int
+    n_chunks: int
+    chunks_skipped: int
+    prefill_s: float
+    decode_s: float
+    stored_prefixes: int
+    n_new_tokens: int
+
+
+@dataclass
+class ServeEngine:
+    cfg: LMConfig
+    params: Any
+    max_len: int = 512
+    chunk: int = 32
+    policy: StoragePolicy = field(default_factory=RISP)
+    greedy: bool = True
+
+    def __post_init__(self) -> None:
+        self._snapshots: dict[str, tuple[Any, int]] = {}  # key -> (host cache, len)
+        self._prefill = jax.jit(
+            lambda p, t, c, l: transformer.prefill_chunk(p, self.cfg, t, c, l)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, l: transformer.decode_step(p, self.cfg, t, c, l)
+        )
+
+    # -- RISP bookkeeping over request chunks ------------------------------
+    def _workflow(self, chunks: list[np.ndarray]) -> Workflow:
+        mods = tuple(ModuleRef(_chunk_id(c)) for c in chunks)
+        return Workflow("prompts", mods, workflow_id=f"req{self.policy.n_pipelines}")
+
+    def _snapshot(self, key: str, cache: Any, length: int) -> None:
+        host = jax.tree_util.tree_map(lambda a: np.asarray(a), cache)
+        self._snapshots[key] = (host, length)
+
+    def _restore(self, key: str) -> tuple[Any, int]:
+        host, length = self._snapshots[key]
+        return jax.tree_util.tree_map(jnp.asarray, host), length
+
+    # -- generation ---------------------------------------------------------
+    def generate(
+        self, prompt: list[int] | np.ndarray, max_new_tokens: int = 16
+    ) -> tuple[list[int], GenStats]:
+        prompt = np.asarray(prompt, np.int32)
+        pad = (-len(prompt)) % self.chunk
+        padded = np.concatenate([np.zeros(pad, np.int32), prompt])  # left-pad
+        chunks = [padded[i : i + self.chunk] for i in range(0, len(padded), self.chunk)]
+        wf = self._workflow(chunks)
+        rec = self.policy.step(wf)
+
+        # longest stored prefix with a live snapshot
+        start, cache, cache_len_i = 0, None, 0
+        cand = rec.reuse
+        while cand is not None:
+            key = cand.key(self.policy.with_state)
+            if key in self._snapshots:
+                cache, cache_len_i = self._restore(key)
+                start = cand.depth
+                break
+            self.policy.stored.pop(key, None)
+            cand = cand.parent()
+        if cache is None:
+            cache = transformer.init_cache(self.cfg, 1, self.max_len)
+
+        t0 = time.perf_counter()
+        cache_len = jnp.asarray([cache_len_i], jnp.int32)
+        logits = None
+        boundary_caches: dict[int, tuple[Any, int]] = {}
+        for i in range(start, len(chunks)):
+            tok = jnp.asarray(chunks[i][None], jnp.int32)
+            logits, cache, cache_len = self._prefill(self.params, tok, cache, cache_len)
+            boundary_caches[i + 1] = (cache, int(cache_len[0]))
+        prefill_s = time.perf_counter() - t0
+
+        # store admitted prefixes (only those whose boundary we computed)
+        stored = 0
+        for prefix in rec.store:
+            if prefix.depth in boundary_caches:
+                c, ln = boundary_caches[prefix.depth]
+                self._snapshot(prefix.key(self.policy.with_state), c, ln)
+                stored += 1
+            else:
+                self.policy.stored.pop(prefix.key(self.policy.with_state), None)
+
+        # decode
+        t1 = time.perf_counter()
+        out: list[int] = []
+        if logits is None:  # full-prompt cache hit: re-run last chunk's logits
+            tok = jnp.asarray(chunks[-1][None], jnp.int32)
+            trimmed_cache, trimmed_len = self._trim_last_chunk(cache, cache_len)
+            logits, cache, cache_len = self._prefill(
+                self.params, tok, trimmed_cache, trimmed_len
+            )
+        for _ in range(max_new_tokens):
+            nxt = int(jnp.argmax(logits[0]))
+            out.append(nxt)
+            tok = jnp.asarray([[nxt]], jnp.int32)
+            logits, cache, cache_len = self._decode(self.params, tok, cache, cache_len)
+        decode_s = time.perf_counter() - t1
+
+        return out, GenStats(
+            prompt_len=len(prompt),
+            n_chunks=len(chunks),
+            chunks_skipped=start,
+            prefill_s=prefill_s,
+            decode_s=decode_s,
+            stored_prefixes=stored,
+            n_new_tokens=len(out),
+        )
+
+    def _trim_last_chunk(self, cache, cache_len):
+        """Full-prefix hit: zero out the last chunk's slots and re-prefill it
+        to recover last-position logits (snapshots store caches, not logits)."""
+        ln = int(cache_len[0]) - self.chunk
+        T = jax.tree_util.tree_leaves(cache)[0].shape[2]
+        keep = (jnp.arange(T) < ln).astype(jax.tree_util.tree_leaves(cache)[0].dtype)
+
+        def zero_tail(a):
+            shape = (1, 1, T) + (1,) * (a.ndim - 3)
+            return a * keep.reshape(shape)
+
+        return (
+            jax.tree_util.tree_map(zero_tail, cache),
+            jnp.asarray([ln], jnp.int32),
+        )
+
+    # -- accounting -----------------------------------------------------------
+    @property
+    def n_snapshots(self) -> int:
+        return len(self._snapshots)
+
+    def snapshot_bytes(self) -> int:
+        total = 0
+        for host, _ in self._snapshots.values():
+            for leaf in jax.tree_util.tree_leaves(host):
+                total += leaf.nbytes
+        return total

@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests: reduced config, one train/serve step on CPU,
+asserting output shapes and finiteness (no NaNs)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shapes, input_specs, list_archs
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeCell
+from repro.data import make_batch
+from repro.models.layers import init_params
+from repro.optim import AdamWConfig
+from repro.train import build_param_specs, build_serve_step, build_train_step, make_train_state
+
+ALL_ARCHS = list_archs()
+
+
+def _smoke_cell(cfg, cell: ShapeCell) -> ShapeCell:
+    """Shrink a shape cell to CPU scale, keeping its kind."""
+    p = dict(cell.params)
+    if isinstance(cfg, LMConfig):
+        p["seq_len"] = 32
+        p["global_batch"] = 2
+    elif isinstance(cfg, GNNConfig):
+        if cell.kind == "full_graph":
+            p.update(n_nodes=40, n_edges=160, d_feat=12)
+        elif cell.kind == "minibatch":
+            p.update(batch_nodes=4, fanout1=3, fanout2=2)
+        elif cell.kind == "batched_graphs":
+            p.update(batch=3, n_nodes=10, n_edges=24)
+    else:
+        p["batch"] = 8
+        if "n_candidates" in p:
+            p["n_candidates"] = 64
+    return dataclasses.replace(cell, params=p)
+
+
+def _assert_finite(tree, where=""):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all()), f"NaN/Inf in {where}"
+
+
+def _init(cfg, cell):
+    specs = build_param_specs(cfg, cell)
+    dtype = cfg.dtype if isinstance(cfg, LMConfig) else jnp.float32
+    return init_params(jax.random.PRNGKey(0), specs, dtype)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    cells = [c for c in get_shapes(arch) if c.kind in ("train", "full_graph", "minibatch", "batched_graphs")]
+    cell = _smoke_cell(cfg, cells[0])
+    if isinstance(cfg, GNNConfig) and cell.kind == "minibatch":
+        # minibatch spec hardcodes reddit d_feat; use the smoke-sized variant
+        pass
+    params = _init(cfg, cell)
+    state = make_train_state(params)
+    step = build_train_step(cfg, cell, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    batch = make_batch(cfg, cell, seed=1)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    _assert_finite(new_state["params"], f"{arch} params after step")
+    # one more step must also be finite (optimizer state exercised)
+    new_state, metrics = jax.jit(step)(new_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS if a not in ("gatedgcn",)])
+def test_serve_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    serve_cells = [c for c in get_shapes(arch) if c.kind in ("prefill", "decode", "serve", "retrieval")]
+    for cell in serve_cells[:2]:  # limit CPU time: first two serve cells
+        cell = _smoke_cell(cfg, cell)
+        if isinstance(cfg, LMConfig) and cfg.name.startswith(("deepseek-7b", "tinyllama", "qwen2")) and cell.params["seq_len"] > 10**5:
+            continue  # long_500k skipped for pure full-attention archs
+        params = _init(cfg, cell)
+        fn = build_serve_step(cfg, cell)
+        batch = make_batch(cfg, cell, seed=2)
+        out = jax.jit(fn)(params, **batch)
+        _assert_finite(out, f"{arch}/{cell.name}")
+        if isinstance(cfg, LMConfig) and cell.kind == "decode":
+            logits, new_cache, new_len = out
+            assert logits.shape == (cell.params["global_batch"], cfg.vocab)
+            assert int(new_len[0]) == cell.params["seq_len"] // 2 + 1
+        if isinstance(cfg, RecsysConfig) and cell.kind == "retrieval":
+            scores = out
+            assert scores.shape[-1] == cell.params["n_candidates"]
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "gemma3-4b", "deepseek-v2-236b"])
+def test_lm_decode_matches_prefill(arch):
+    """Decoding token t with a cache built by prefill must agree with a full
+    forward pass over the first t+1 tokens (numerical consistency of the
+    cached path — incl. MLA's absorbed decode and gemma3's local layers)."""
+    cfg = get_config(arch, smoke=True)
+    # fp32: this validates path equivalence (absorbed-MLA decode, gemma3 local
+    # masks, cache insertion), not bf16 rounding between contraction orders
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    if cfg.moe is not None:
+        # decode batches route without drops; match by lifting train capacity
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)
+    from repro.models import transformer
+
+    B, S = 2, 12
+    params = _init(cfg, ShapeCell("x", "train", {"seq_len": S, "global_batch": B}))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, S + 1)), jnp.int32)
+
+    logits_full, _ = transformer.forward(params, cfg, tokens)
+    # prefill first S tokens, then decode token S
+    _, cache, cache_len = transformer.prefill(params, cfg, tokens[:, :S])
+    # pad cache to S+1 so the decode insert has room
+    cache = jax.tree_util.tree_map(
+        lambda c: jnp.pad(c, [(0, 0), (0, 0), (0, 4)] + [(0, 0)] * (c.ndim - 3)), cache
+    )
+    logits_dec, _, _ = transformer.decode_step(
+        params, cfg, tokens[:, S : S + 1], cache, cache_len
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_dec),
+        np.asarray(logits_full[:, S]),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_gnn_minibatch_sampler_end_to_end():
+    from repro.data.graph import CSRGraph, NeighborSampler, random_graph
+
+    cfg = get_config("gatedgcn", smoke=True)
+    n, e = 500, 4000
+    ei = random_graph(n, e, seed=0)
+    g = CSRGraph.from_edge_index(ei, n)
+    sampler = NeighborSampler(g, (3, 2), seed=0)
+    seeds = np.arange(8, dtype=np.int32)
+    block = sampler.sample(seeds)
+    assert block["nodes"].shape == (8 * (1 + 3 + 6),)
+    assert block["edge_index"].shape == (2, 8 * (3 + 6))
+    assert block["edge_index"].max() < block["nodes"].shape[0]
+
+    # run a train step on the sampled block
+    from repro.models import gnn
+    from repro.models.layers import init_params as ip
+
+    feats = np.random.default_rng(0).normal(size=(n, 12)).astype(np.float32)
+    node_feat = jnp.asarray(feats[block["nodes"]])
+    specs = gnn.gnn_specs(cfg, 12)
+    params = ip(jax.random.PRNGKey(0), specs, jnp.float32)
+    logits = gnn.forward(params, cfg, node_feat, jnp.asarray(block["edge_index"]))
+    assert logits.shape == (block["nodes"].shape[0], cfg.n_classes)
+    assert bool(jnp.isfinite(logits).all())

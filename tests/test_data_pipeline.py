@@ -1,0 +1,53 @@
+"""Data-prep pipeline through the SWfMS executor: reuse + state sensitivity."""
+import numpy as np
+import pytest
+
+from repro.core import IntermediateStore, RISP, TSAR, WorkflowExecutor
+from repro.data.pipeline import make_corpus_blob, register_data_modules
+
+
+@pytest.fixture()
+def ex(tmp_path):
+    e = WorkflowExecutor(
+        store=IntermediateStore(tmp_path / "s"), policy=TSAR(with_state=True)
+    )
+    register_data_modules(e, vocab=1000)
+    return e
+
+
+def test_data_pipeline_reuse(ex):
+    blob = make_corpus_blob(1 << 16)
+    steps = ["tokenize", ("pack", {"seq_len": 64}), "split"]
+    r1 = ex.run("corpus-v1", blob, steps, "prep1")
+    assert r1.n_skipped == 0
+    assert r1.output["train"].shape[1] == 65
+    # a second training job over the same corpus reuses everything
+    r2 = ex.run("corpus-v1", blob, steps, "prep2")
+    assert r2.n_skipped == 3
+    np.testing.assert_array_equal(
+        np.asarray(r1.output["train"]), np.asarray(r2.output["train"])
+    )
+
+
+def test_data_pipeline_state_sensitivity(ex):
+    blob = make_corpus_blob(1 << 16)
+    ex.run("corpus-v1", blob, ["tokenize", ("pack", {"seq_len": 64})], "a")
+    # different seq_len: tokenize reused, pack recomputed
+    r = ex.run("corpus-v1", blob, ["tokenize", ("pack", {"seq_len": 32})], "b")
+    assert r.n_skipped == 1
+    assert r.output.shape[1] == 33
+
+
+def test_cost_model_gain_accounting(tmp_path):
+    from repro.core import CostModel
+    from repro.core.workflow import ModuleRef, PrefixKey, ToolState
+
+    store = IntermediateStore(tmp_path / "c")
+    cm = CostModel(store=store)
+    ref = ModuleRef("m", ToolState())
+    cm.observe(ref, seconds=2.0, out_bytes=1000)
+    prefix = PrefixKey("d", (ref,))
+    # T1 = exec (2s) + store estimate; T2 = load estimate; gain ~ 2s
+    assert cm.t1(prefix) >= 2.0
+    assert cm.gain(prefix) > 1.0
+    assert cm.should_store(prefix)

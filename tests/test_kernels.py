@@ -1,0 +1,200 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+TOLS = {"float32": 2e-5, "bfloat16": 2e-2}
+
+
+def _tol(dtype):
+    return TOLS[str(dtype)]
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+FLASH_CASES = [
+    # (B, Sq, Sk, Hq, Hkv, d, causal, window, blk)
+    (1, 64, 64, 1, 1, 32, True, None, 32),
+    (2, 128, 128, 4, 2, 64, True, None, 64),
+    (2, 96, 96, 8, 8, 32, False, None, 32),  # non-multiple of block -> padding
+    (1, 256, 256, 4, 1, 64, True, 64, 64),  # MQA + sliding window
+    (2, 128, 128, 4, 4, 128, True, None, 128),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Sq, Sk, Hq, Hkv, d, causal, window, blk = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Sk, Hkv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Sk, Hkv, d)), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, block_q=blk, block_k=blk,
+        interpret=True,
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+@settings(max_examples=8, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    s=st.integers(2, 5).map(lambda e: 2**e * 8),  # 32..256
+    hq_groups=st.sampled_from([(2, 1), (4, 4), (8, 2)]),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(s, hq_groups, d, causal):
+    hq, hkv = hq_groups
+    rng = np.random.default_rng(s * d + hq)
+    q = jnp.asarray(rng.normal(size=(1, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, hkv, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# decode attention
+# --------------------------------------------------------------------------
+DECODE_CASES = [
+    # (B, T, Hq, Hkv, d, blk)
+    (2, 256, 4, 2, 64, 128),
+    (4, 512, 8, 8, 32, 256),
+    (1, 384, 4, 1, 128, 128),  # MQA, T non-multiple handled by padding
+    (3, 200, 2, 2, 64, 128),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_decode_attention_matches_ref(case, dtype):
+    B, T, Hq, Hkv, d, blk = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = jnp.asarray(rng.normal(size=(B, Hq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, Hkv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, Hkv, d)), dtype)
+    lens = jnp.asarray(rng.integers(1, T + 1, size=(B,)), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=blk, interpret=True)
+    ref = decode_attention_ref(
+        q.reshape(B, Hkv, Hq // Hkv, d), k, v, lens
+    ).reshape(B, Hq, d)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+def test_decode_attention_matches_model_path():
+    """Kernel agrees with the model's XLA decode_attention (S=1)."""
+    from repro.models.attention import decode_attention as xla_decode
+
+    B, T, Hq, Hkv, d = 2, 128, 4, 2, 32
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, Hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, Hkv, d)), jnp.float32)
+    q_start = jnp.asarray([40, 100], jnp.int32)
+    ref = xla_decode(q, k, v, q_start)  # attends kpos <= q_start
+    out = decode_attention(q[:, 0], k, v, q_start + 1, block_k=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref[:, 0]), atol=2e-5, rtol=2e-5
+    )
+
+
+# --------------------------------------------------------------------------
+# embedding bag
+# --------------------------------------------------------------------------
+BAG_CASES = [
+    # (V, dim, n_bags, bag_size, combiner)
+    (1000, 16, 8, 4, "sum"),
+    (5000, 128, 16, 26, "sum"),  # dcn-v2-like field lookup
+    (300, 10, 32, 39, "sum"),  # fm-like
+    (256, 50, 4, 50, "mean"),  # sasrec-like history pooling
+]
+
+
+@pytest.mark.parametrize("case", BAG_CASES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_embedding_bag_matches_ref(case, dtype):
+    V, dim, n_bags, bag, combiner = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    table = jnp.asarray(rng.normal(size=(V, dim)), dtype)
+    ids = jnp.asarray(rng.integers(0, V, size=(n_bags, bag)), jnp.int32)
+    w = jnp.asarray(rng.random((n_bags, bag)), jnp.float32)
+    out = embedding_bag(table, ids, w, combiner=combiner, interpret=True)
+    ref = embedding_bag_ref(table, ids, w, combiner=combiner)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+@settings(max_examples=8, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    v=st.integers(10, 2000),
+    dim=st.sampled_from([8, 16, 64, 130]),
+    n_bags=st.integers(1, 16),
+    bag=st.integers(1, 12),
+)
+def test_embedding_bag_property(v, dim, n_bags, bag):
+    rng = np.random.default_rng(v + dim + n_bags)
+    table = jnp.asarray(rng.normal(size=(v, dim)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, v, size=(n_bags, bag)), jnp.int32)
+    out = embedding_bag(table, ids, interpret=True)
+    ref = embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# gnn aggregate
+# --------------------------------------------------------------------------
+from repro.kernels.gnn_aggregate import edge_to_padded, gnn_aggregate, gnn_aggregate_ref
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("case", [(50, 16, 8), (128, 70, 12), (16, 128, 4)])
+def test_gnn_aggregate_matches_ref(case, dtype):
+    N, dim, deg = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    h = jnp.asarray(rng.normal(size=(N, dim)), dtype)
+    nbr = jnp.asarray(rng.integers(0, N, size=(N, deg)), jnp.int32)
+    gates = jnp.asarray(rng.random((N, deg, dim)), dtype)
+    out = gnn_aggregate(h, nbr, gates, interpret=True)
+    ref = gnn_aggregate_ref(h, nbr, gates)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+def test_gnn_aggregate_matches_segment_sum():
+    """Padded-ELL kernel equals the model's COO segment_sum formulation."""
+    N, E, dim, deg = 40, 150, 16, 24
+    rng = np.random.default_rng(3)
+    edge_index = np.stack([rng.integers(0, N, E), rng.integers(0, N, E)])
+    h = jnp.asarray(rng.normal(size=(N, dim)), jnp.float32)
+    eta = rng.random((E, dim)).astype(np.float32)
+    nbr, gates = edge_to_padded(edge_index, eta, N, deg)
+    out = gnn_aggregate(h, jnp.asarray(nbr), jnp.asarray(gates), interpret=True)
+    ref = jax.ops.segment_sum(
+        jnp.asarray(eta) * jnp.take(h, jnp.asarray(edge_index[0]), axis=0),
+        jnp.asarray(edge_index[1]),
+        num_segments=N,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,123 @@
+"""Policy replay + metric invariants (unit + property tests)."""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import (
+    TSAR,
+    TSFR,
+    TSPAR,
+    Workflow,
+    evaluate_all,
+    generate_corpus,
+    make_policy,
+)
+from repro.core.corpus import CorpusSpec
+
+
+def small_corpus(seed=0, n=60, with_state=False):
+    return generate_corpus(
+        CorpusSpec(
+            n_workflows=n,
+            n_datasets=6,
+            n_modules=30,
+            mean_len=6,
+            with_state=with_state,
+            seed=seed,
+        )
+    )
+
+
+def test_tsar_stores_all_prefixes_dedup():
+    wfs = [
+        Workflow.build("D1", ["A", "B", "C"]),
+        Workflow.build("D1", ["A", "B", "D"]),
+    ]
+    pol = TSAR()
+    pol.step(wfs[0])
+    pol.step(wfs[1])
+    # prefixes: A, AB, ABC from wf1; A, AB (dup) + ABD from wf2 -> 4 distinct
+    assert pol.n_stored == 4
+    assert pol.n_reusable_pipelines == 1  # wf2 reuses AB
+
+
+def test_tsfr_full_rerun_reuses_final():
+    pol = TSFR()
+    pol.step(Workflow.build("D1", ["A", "B"]))
+    rec = pol.step(Workflow.build("D1", ["A", "B"]))
+    assert rec.reuse is not None and rec.reuse.depth == 2
+    assert pol.n_stored == 1
+
+
+def test_tsfr_stored_final_usable_as_prefix():
+    pol = TSFR()
+    pol.step(Workflow.build("D1", ["A", "B"]))
+    rec = pol.step(Workflow.build("D1", ["A", "B", "C"]))
+    assert rec.reuse is not None and rec.reuse.depth == 2
+
+
+def test_tspar_stores_only_previously_appeared():
+    pol = TSPAR()
+    rec1 = pol.step(Workflow.build("D1", ["A", "B"]))
+    assert rec1.store == []  # nothing appeared before
+    rec2 = pol.step(Workflow.build("D1", ["A", "C"]))
+    assert len(rec2.store) == 1 and rec2.store[0].depth == 1  # A appeared before
+
+
+def test_reuse_is_longest_prefix():
+    pol = TSAR()
+    pol.step(Workflow.build("D1", ["A", "B", "C", "D"]))
+    rec = pol.step(Workflow.build("D1", ["A", "B", "C", "E"]))
+    assert rec.reuse is not None and rec.reuse.depth == 3
+
+
+@settings(max_examples=20, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 10_000), with_state=st.booleans())
+def test_metric_invariants(seed, with_state):
+    corpus = small_corpus(seed=seed, with_state=with_state)
+    reports = evaluate_all(corpus, with_state=with_state)
+    pt, tsar, tspar, tsfr = (
+        reports["PT"],
+        reports["TSAR"],
+        reports["TSPAR"],
+        reports["TSFR"],
+    )
+    # TSAR stores a superset => its reuse likeliness dominates everything
+    assert tsar.lr >= pt.lr
+    assert tsar.lr >= tspar.lr
+    assert tsar.lr >= tsfr.lr
+    # storing-all cannot store fewer than the selective policies
+    assert tsar.n_stored >= pt.n_stored
+    assert tsar.n_stored >= tspar.n_stored
+    assert tsar.n_stored >= tsfr.n_stored
+    # all PISRS within [0, 100]; all totals consistent
+    for r in reports.values():
+        assert 0 <= r.pisrs <= 100.0
+        assert 0 <= r.lr <= 100.0
+        assert r.n_stored_reused <= r.n_stored
+        assert r.total_intermediate_states == sum(len(w) for w in corpus)
+
+
+@settings(max_examples=15, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 10_000))
+def test_history_extension_monotone_support(seed):
+    """Adding pipelines never decreases a rule's support."""
+    corpus = small_corpus(seed=seed, n=30)
+    from repro.core import RuleMiner
+
+    m = RuleMiner()
+    probe = corpus[0].prefix(1)
+    prev = 0
+    for wf in corpus:
+        m.add(wf)
+        cur = m.support(probe)
+        assert cur >= prev
+        prev = cur
+
+
+def test_pt_stores_at_most_one_per_pipeline():
+    corpus = small_corpus(seed=3)
+    pol = make_policy("PT")
+    for wf in corpus:
+        rec = pol.step(wf)
+        assert len(rec.store) <= 1
+    assert pol.n_stored <= len(corpus)

@@ -1,0 +1,102 @@
+"""Rule mining against the thesis' worked examples (Ch. 4.3, Fig 4.1/5.1)."""
+import pytest
+
+from repro.core import RISP, RuleMiner, Workflow
+from repro.core.workflow import ModuleRef, ToolState
+
+# Fig 4.1: four pipelines.
+#   P1: D1 -> M1 M2 M3 M4
+#   P2: D2 -> M2 M5 M8
+#   P3: D1 -> M1 M2 M3 M6
+#   P4: D1 -> M1 M2 M7 M8   (pipeline under progress)
+P1 = Workflow.build("D1", ["M1", "M2", "M3", "M4"], "P1")
+P2 = Workflow.build("D2", ["M2", "M5", "M8"], "P2")
+P3 = Workflow.build("D1", ["M1", "M2", "M3", "M6"], "P3")
+P4 = Workflow.build("D1", ["M1", "M2", "M7", "M8"], "P4")
+
+
+def miner_with_all():
+    m = RuleMiner()
+    for wf in (P1, P2, P3, P4):
+        m.add(wf)
+    return m
+
+
+def test_ten_distinct_rules():
+    # Thesis: "From all four pipelines in Fig. 4.1, we get ten distinct
+    # association rules."
+    assert miner_with_all().n_distinct_rules == 10
+
+
+def test_supports_match_thesis():
+    m = miner_with_all()
+    assert m.support(P1.prefix(1)) == 3  # D1=>M1
+    assert m.support(P1.prefix(2)) == 3  # D1=>[M1,M2]
+    assert m.support(P1.prefix(3)) == 2  # D1=>[M1,M2,M3]
+    assert m.dataset_support("D1") == 3
+    assert m.dataset_support("D2") == 1
+
+
+def test_confidences_match_thesis():
+    m = miner_with_all()
+    assert m.rule(P1.prefix(1)).confidence == pytest.approx(1.0)
+    assert m.rule(P1.prefix(2)).confidence == pytest.approx(1.0)
+    assert m.rule(P1.prefix(3)).confidence == pytest.approx(2 / 3)
+    # rules from P4: conf 1, 1, 1/3, 1/3
+    rules = m.rules_for(P4)
+    assert [pytest.approx(r.confidence) for r in rules] == [1.0, 1.0, 1 / 3, 1 / 3]
+
+
+def test_risp_recommends_m2_output():
+    # Thesis Ch. 4.3.3: "from the fourth pipeline, we recommend to store the
+    # result obtained from module M2."
+    pol = RISP()
+    for wf in (P1, P2, P3):
+        pol.step(wf)
+    rec = pol.step(P4)
+    assert rec.store, "P4 must admit a store"
+    chosen = rec.store[0]
+    assert chosen.depth == 2
+    assert [m.module_id for m in chosen.modules] == ["M1", "M2"]
+
+
+def test_adaptive_risp_state_mismatch_blocks_deeper_rule():
+    # Ch. 5 example (Fig 5.1): same module sequence but M3 runs with config
+    # C3' in the 4th pipeline -> the M1,M2,M3 rule must not match; the
+    # recommendation stays at M2.
+    c = {"M1": {"p": 1}, "M2": {"p": 2}, "M3": {"p": 3}}
+    w1 = Workflow.build(
+        "D1", [("M1", c["M1"]), ("M2", c["M2"]), ("M3", c["M3"]), ("M4", None)], "W1"
+    )
+    w3 = Workflow.build(
+        "D1", [("M1", c["M1"]), ("M2", c["M2"]), ("M3", c["M3"]), ("M6", None)], "W3"
+    )
+    w4 = Workflow.build(
+        "D1",
+        [("M1", c["M1"]), ("M2", c["M2"]), ("M3", {"p": 99}), ("M6", None)],
+        "W4",
+    )
+    pol = RISP(with_state=True)
+    pol.step(w1)
+    pol.step(w3)
+    rec = pol.step(w4)
+    chosen = rec.store[0]
+    assert chosen.depth == 2, "state-mismatched M3 must not extend the rule"
+    assert [m.module_id for m in chosen.modules] == ["M1", "M2"]
+
+
+def test_tool_state_digest_stability():
+    a = ToolState.from_config({"x": 1, "y": "z"})
+    b = ToolState.from_config({"y": "z", "x": 1})
+    assert a.digest == b.digest
+    c = ToolState.from_config({"x": 2, "y": "z"})
+    assert a.digest != c.digest
+
+
+def test_prefix_keys_distinguish_state_only_when_asked():
+    r1 = ModuleRef("M1", ToolState.from_config({"a": 1}))
+    r2 = ModuleRef("M1", ToolState.from_config({"a": 2}))
+    w1 = Workflow("D", (r1,))
+    w2 = Workflow("D", (r2,))
+    assert w1.prefix(1).key(False) == w2.prefix(1).key(False)
+    assert w1.prefix(1).key(True) != w2.prefix(1).key(True)

@@ -1,0 +1,136 @@
+"""Checkpoint/restore, elastic reshard, fault-tolerant driver, serve engine."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.data import make_batch
+from repro.models.layers import init_params
+from repro.optim import AdamWConfig
+from repro.runtime import TrainDriver
+from repro.train import build_param_specs, build_train_step, make_train_state
+
+CELL = ShapeCell("t", "train", {"seq_len": 16, "global_batch": 4})
+
+
+def tiny_state(arch="tinyllama-1.1b"):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), build_param_specs(cfg, CELL), cfg.dtype)
+    return cfg, make_train_state(params)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, state = tiny_state()
+    mgr = CheckpointManager(tmp_path / "ck")
+    info = mgr.save(5, state)
+    assert info.nbytes > 0
+    step, restored = mgr.restore()
+    assert step == 5
+    for a, b in zip(
+        jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_policy(tmp_path):
+    cfg, state = tiny_state()
+    mgr = CheckpointManager(tmp_path / "ck", keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.full((4,), s)})
+    assert [c["step"] for c in mgr.checkpoints] == [3, 4]
+    step, st = mgr.restore(3)
+    np.testing.assert_array_equal(np.asarray(st["x"]), 3.0)
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck", async_save=True)
+    info = mgr.save(1, {"x": jnp.arange(8.0)})
+    assert info.async_pending
+    mgr.wait()
+    step, st = mgr.restore()
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(st["x"]), np.arange(8.0))
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore onto explicit (different) shardings — elastic scaling path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mgr = CheckpointManager(tmp_path / "ck")
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(1, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = {"w": NamedSharding(mesh, P("data"))}
+    step, restored = mgr.restore(shardings=shardings)
+    assert restored["w"].sharding == shardings["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+
+
+def test_train_driver_failure_recovery(tmp_path):
+    cfg, state = tiny_state()
+    step_fn = build_train_step(cfg, CELL, AdamWConfig(warmup_steps=1, total_steps=20))
+    batches = {s: make_batch(cfg, CELL, seed=s) for s in range(12)}
+    driver = TrainDriver(
+        train_step=step_fn,
+        make_batch=lambda s: batches[s],
+        ckpt=CheckpointManager(tmp_path / "ck", keep=2),
+        ckpt_every=4,
+        fail_at_steps=(6,),
+    )
+    final_state, log = driver.run(state, 10)
+    restarts = [e for e in log if e.get("event") == "restart"]
+    assert len(restarts) == 1 and restarts[0]["from_step"] == 4
+    steps_run = [e["step"] for e in log if "step" in e]
+    assert steps_run[-1] == 10
+    # steps 5,6 ran twice (recovery re-execution from the checkpoint)
+    assert steps_run.count(5) == 2 and steps_run.count(6) == 2
+    losses = [e["loss"] for e in log if "loss" in e]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_serve_engine_prefix_reuse():
+    from repro.serve import ServeEngine
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = init_params(jax.random.PRNGKey(1), build_param_specs(cfg, CELL), cfg.dtype)
+    eng = ServeEngine(cfg, params, max_len=128, chunk=8)
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab, size=24).tolist()  # shared system prompt
+    outs = []
+    stats = []
+    for i in range(4):
+        user = rng.integers(0, cfg.vocab, size=8).tolist()
+        toks, st = eng.generate(system + user, max_new_tokens=3)
+        outs.append(toks)
+        stats.append(st)
+    # by the 3rd repeat of the system prompt, RISP must be skipping its chunks
+    assert stats[0].chunks_skipped == 0
+    assert any(s.chunks_skipped >= 2 for s in stats[2:]), [
+        (s.chunks_skipped, s.n_chunks) for s in stats
+    ]
+    assert eng.n_snapshots >= 1
+
+
+def test_serve_engine_reuse_matches_cold():
+    """Generation with a reused prefix must equal cold generation."""
+    from repro.core.risp import TSAR
+    from repro.serve import ServeEngine
+
+    cfg = get_config("gemma3-4b", smoke=True)  # exercises local:global decode
+    params = init_params(jax.random.PRNGKey(2), build_param_specs(cfg, CELL), cfg.dtype)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, size=16).tolist()
+
+    cold = ServeEngine(cfg, params, max_len=64, chunk=8)
+    ref, st_cold = cold.generate(prompt, max_new_tokens=4)
+
+    eng = ServeEngine(cfg, params, max_len=64, chunk=8, policy=TSAR())
+    first, _ = eng.generate(prompt, max_new_tokens=4)
+    again, st = eng.generate(prompt, max_new_tokens=4)
+    assert st.chunks_skipped == st.n_chunks  # full-prefix hit
+    assert first == ref
+    assert again == ref

@@ -1,0 +1,172 @@
+"""IntermediateStore round-trips + executor prefix skipping + error recovery."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import (
+    IntermediateStore,
+    ModuleSpec,
+    RISP,
+    TSAR,
+    WorkflowError,
+    WorkflowExecutor,
+)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return IntermediateStore(tmp_path / "store")
+
+
+def test_store_roundtrip_pytree(store):
+    value = {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "b": [np.int32(7), jnp.ones((2, 2), jnp.bfloat16)],
+    }
+    store.put("k1", value)
+    assert store.has("k1")
+    out = store.get("k1")
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(value["a"]))
+    assert out["b"][1].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["b"][1]), np.ones((2, 2)))
+
+
+def test_store_dedup_and_delete(store):
+    v = jnp.ones((8,))
+    r1 = store.put("k", v)
+    r2 = store.put("k", v)
+    assert not r1.deduped and r2.deduped
+    store.delete("k")
+    assert not store.has("k")
+    with pytest.raises(KeyError):
+        store.get("k")
+
+
+def test_store_index_survives_reopen(tmp_path):
+    s1 = IntermediateStore(tmp_path / "s")
+    s1.put("k", jnp.arange(4))
+    s2 = IntermediateStore(tmp_path / "s")
+    assert s2.has("k")
+    np.testing.assert_array_equal(np.asarray(s2.get("k")), np.arange(4))
+
+
+@settings(max_examples=10, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    shape=st.lists(st.integers(1, 5), min_size=0, max_size=3),
+    dtype=st.sampled_from(["float32", "int32", "float16", "bfloat16"]),
+    seed=st.integers(0, 100),
+)
+def test_store_roundtrip_property(tmp_path_factory, shape, dtype, seed):
+    store = IntermediateStore(tmp_path_factory.mktemp("s"))
+    rng = np.random.default_rng(seed)
+    arr = jnp.asarray(rng.normal(size=shape)).astype(dtype)
+    store.put("k", arr)
+    out = store.get("k")
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(
+        np.asarray(out, dtype=np.float64), np.asarray(arr, dtype=np.float64)
+    )
+
+
+def make_executor(store, policy=None, **kw):
+    ex = WorkflowExecutor(store=store, policy=policy or RISP(), **kw)
+    calls = {"double": 0, "inc": 0, "square": 0, "fail": 0}
+
+    def count(name, fn):
+        def wrapped(x, **params):
+            calls[name] += 1
+            return fn(x, **params)
+
+        return wrapped
+
+    ex.register(ModuleSpec("double", count("double", lambda x: x * 2)))
+    ex.register(ModuleSpec("inc", count("inc", lambda x, by=1: x + by), {"by": 1}))
+    ex.register(ModuleSpec("square", count("square", lambda x: x * x)))
+
+    def failing(x, n_ok=0):
+        calls["fail"] += 1
+        raise RuntimeError("boom")
+
+    ex.register(ModuleSpec("fail", failing))
+    return ex, calls
+
+
+def test_executor_prefix_skip(store):
+    ex, calls = make_executor(store, policy=TSAR())
+    data = jnp.arange(6.0)
+    r1 = ex.run("ds", data, ["double", "inc", "square"], "w1")
+    assert r1.n_skipped == 0 and calls["double"] == 1
+    # same prefix, different tail: double+inc must be skipped
+    r2 = ex.run("ds", data, ["double", "inc", "inc"], "w2")
+    assert r2.n_skipped == 2
+    assert calls["double"] == 1 and calls["inc"] == 2  # only the tail ran
+    np.testing.assert_allclose(
+        np.asarray(r2.output), np.asarray((data * 2 + 1) + 1)
+    )
+
+
+def test_executor_cache_equivalence(store, tmp_path):
+    """Cached execution must produce bit-identical results to cold execution."""
+    ex, _ = make_executor(store, policy=TSAR())
+    data = jnp.linspace(-2, 2, 16)
+    steps = ["double", ("inc", {"by": 3}), "square"]
+    cold = ex.run("ds", data, steps, "w1").output
+    warm = ex.run("ds", data, steps, "w2").output  # full-prefix cache hit
+    np.testing.assert_array_equal(np.asarray(cold), np.asarray(warm))
+
+    # and equals a store-free executor
+    ex2, _ = make_executor(IntermediateStore(tmp_path / "s2"))
+    ref = ex2.run("ds", data, steps, "w3").output
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(cold))
+
+
+def test_executor_tool_state_distinguishes(store):
+    ex, calls = make_executor(store, policy=TSAR(with_state=True))
+    data = jnp.ones((4,))
+    ex.run("ds", data, [("inc", {"by": 1})], "w1")
+    r = ex.run("ds", data, [("inc", {"by": 2})], "w2")
+    assert r.n_skipped == 0  # different tool state: no reuse
+    np.testing.assert_allclose(np.asarray(r.output), 3.0)
+    r3 = ex.run("ds", data, [("inc", {"by": 2})], "w3")
+    assert r3.n_skipped == 1  # same state now cached
+
+
+def test_executor_error_recovery(store):
+    ex, calls = make_executor(store, policy=RISP())
+    data = jnp.arange(4.0)
+    with pytest.raises(WorkflowError) as ei:
+        ex.run("ds", data, ["double", "inc", "fail"], "w1")
+    assert ei.value.failed_at == 2
+    # recovery point [double, inc] was persisted: a fixed rerun skips to it
+    r = ex.run("ds", data, ["double", "inc", "square"], "w2")
+    assert r.n_skipped == 2
+    assert calls["double"] == 1 and calls["inc"] == 1
+    np.testing.assert_allclose(np.asarray(r.output), np.asarray((data * 2 + 1) ** 2))
+
+
+def test_executor_eviction_falls_back(store):
+    ex, calls = make_executor(store, policy=TSAR())
+    data = jnp.arange(4.0)
+    ex.run("ds", data, ["double", "inc"], "w1")
+    # evict the deepest artifact; executor must fall back to the shorter prefix
+    deep_key = ex.make_workflow("ds", ["double", "inc"]).prefix(2).key(False)
+    store.delete(deep_key)
+    r = ex.run("ds", data, ["double", "inc"], "w2")
+    assert r.n_skipped == 1
+    np.testing.assert_allclose(np.asarray(r.output), np.asarray(data * 2 + 1))
+
+
+def test_cost_admission_skips_cheap_modules(store):
+    # with t1_gt_t2 admission, a microsecond module whose output is large
+    # should not be stored (load would cost more than recompute)
+    pol = TSAR()
+    ex, _ = make_executor(store, policy=pol, admission="t1_gt_t2")
+    big = jnp.ones((2048, 2048))  # 16 MB, instant to "compute"
+    r = ex.run("ds", big, ["double"], "w1")
+    # either stored or not depending on measured throughput; must not crash
+    assert isinstance(r.stored_keys, list)
