@@ -1,0 +1,125 @@
+"""Store-budget vs reuse-rate sweep: gain-loss eviction vs LRU.
+
+The thesis assumes unbounded storage; arXiv 2202.06473's gain-loss ratio
+makes the store budget-aware.  This bench replays a synthetic workload with
+the classic adversarial shape for recency-based caches:
+
+  * *protocol* pipelines — a popular, expensive stem (repeated matmuls)
+    whose intermediate is SMALL; rerun constantly with varying cheap tails
+    ("users change only a few modules").
+  * *scan* pipelines — one-off workflows whose intermediates are LARGE but
+    nearly free to recompute.
+
+Under a budget, LRU lets each scan flush the precious protocol artifacts
+(recency ≠ value); gain-loss ranks by seconds-saved-per-byte and keeps them.
+Reported per (budget × policy): reuse events/run, modules skipped, max
+observed store bytes (must stay ≤ budget), and total wall seconds.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.core import IntermediateStore, TSAR, WorkflowExecutor
+
+
+def _register(ex: WorkflowExecutor, rng: np.ndarray) -> None:
+    def heavy_reduce(x, iters=600):
+        # expensive compute (hundreds of ms — far above timing noise), small
+        # output: the artifact worth keeping
+        m = np.asarray(x, np.float32).reshape(64, -1)[:, :64]
+        acc = np.eye(64, dtype=np.float32)
+        for _ in range(iters):
+            acc = acc @ m / np.maximum(np.abs(acc).max(), 1.0)
+            acc = acc @ acc.T / np.maximum(np.abs(acc).max(), 1.0)
+        return acc
+
+    def refine(x, power=2):
+        return np.asarray(x, np.float32) ** power / 2.0
+
+    def expand(x, copies=64):
+        # cheap compute, huge output: the artifact NOT worth keeping
+        flat = np.asarray(x, np.float32).ravel()
+        return np.tile(flat, copies)
+
+    def summarize(x, detail=1):
+        return np.sort(np.asarray(x).ravel())[:: max(1, 64 // detail)]
+
+    ex.register_fn("heavy_reduce", heavy_reduce, iters=600)
+    ex.register_fn("refine", refine, power=2)
+    ex.register_fn("expand", expand, copies=64)
+    ex.register_fn("summarize", summarize, detail=1)
+
+
+def _workload(n: int, seed: int):
+    """(dataset_id, steps, workflow_id) tuples: 60% protocol reruns, 40% scans."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        if rng.random() < 0.6:
+            tail = int(rng.integers(1, 5))
+            out.append(
+                ("proto", ["heavy_reduce", "refine", ("summarize", {"detail": tail})])
+            )
+        else:
+            out.append(
+                (f"scan{i}", [("expand", {"copies": 64}), ("summarize", {"detail": 2})])
+            )
+    return out
+
+
+def replay(policy_name: str, budget: int, n: int = 60, seed: int = 3):
+    data = np.arange(64 * 64, dtype=np.float32)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = IntermediateStore(
+            tmp, capacity_bytes=budget, eviction=policy_name, codec="none"
+        )
+        ex = WorkflowExecutor(store=store, policy=TSAR(with_state=True))
+        _register(ex, data)
+        reuse_events = 0
+        skipped = 0
+        total_modules = 0
+        max_bytes = 0
+        total_s = 0.0
+        for i, (ds, steps) in enumerate(_workload(n, seed)):
+            r = ex.run(ds, data, steps, f"w{i}")
+            reuse_events += 1 if r.n_skipped else 0
+            skipped += r.n_skipped
+            total_modules += len(steps)
+            max_bytes = max(max_bytes, store.total_disk_bytes)
+            total_s += r.total_seconds
+        return {
+            "reuse_rate": reuse_events / n,
+            "skip_frac": skipped / total_modules,
+            "max_bytes": max_bytes,
+            "under_budget": max_bytes <= budget,
+            "evictions": store.evictor.n_evictions,
+            "seconds": total_s,
+        }
+
+
+def run() -> list[str]:
+    lines = []
+    budgets = [64 * 1024, 256 * 1024, 1024 * 1024]
+    for budget in budgets:
+        res = {p: replay(p, budget) for p in ("gain_loss", "lru")}
+        for p, r in res.items():
+            lines.append(
+                f"eviction_{p}_{budget // 1024}KB,{r['seconds'] / 60 * 1e6:.0f},"
+                f"reuse={r['reuse_rate']:.2f} skip={r['skip_frac']:.2f} "
+                f"max_bytes={r['max_bytes']} under_budget={r['under_budget']} "
+                f"evictions={r['evictions']}"
+            )
+        gl, lru = res["gain_loss"], res["lru"]
+        assert gl["under_budget"] and lru["under_budget"], "budget violated"
+        lines.append(
+            f"eviction_gain_vs_lru_{budget // 1024}KB,0,"
+            f"gain_loss_reuse={gl['reuse_rate']:.2f} lru_reuse={lru['reuse_rate']:.2f} "
+            f"winner={'gain_loss' if gl['reuse_rate'] >= lru['reuse_rate'] else 'lru'}"
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

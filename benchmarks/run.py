@@ -9,6 +9,7 @@ import traceback
 def main() -> None:
     from . import (
         bench_adaptive_risp,
+        bench_eviction,
         bench_prefix_cache,
         bench_risp,
         bench_serving_load,
@@ -22,6 +23,7 @@ def main() -> None:
         ("time_gain_ch3/ch4 (Table 3.1, Figs 3.5/3.9/4.8)", bench_time_gain.run),
         ("serving_load_ch6 (Table 6.1)", bench_serving_load.run),
         ("prefix_cache (beyond-paper)", bench_prefix_cache.run),
+        ("eviction (gain-loss vs LRU, arXiv 2202.06473)", bench_eviction.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -1,24 +1,42 @@
 """Core RISP library: the paper's contribution as composable components."""
 from .adaptive import adaptive_policy, adaptive_risp
+from .backends import LocalFSBackend, MemoryBackend, StorageBackend, TieredBackend
+from .codecs import Codec, available_codecs, register_codec, resolve_codec
 from .corpus import CorpusSpec, galaxy_ch4_corpus, galaxy_ch5_corpus, generate_corpus
 from .cost import CostModel
+from .eviction import (
+    EvictionManager,
+    EvictionPolicy,
+    GainLossEviction,
+    LRUEviction,
+    gain_loss_ratio,
+)
 from .executor import RunResult, WorkflowError, WorkflowExecutor
 from .metrics import PolicyReport, evaluate_all, evaluate_policy
 from .provenance import ProvenanceLog, RunRecord
 from .risp import RISP, TSAR, TSFR, TSPAR, Recommendation, StoragePolicy, make_policy
 from .rules import Rule, RuleMiner
-from .store import IntermediateStore
+from .store import ArtifactRecord, IntermediateStore, PutResult
 from .workflow import ModuleRef, ModuleSpec, PrefixKey, ToolState, Workflow
 
 __all__ = [
+    "ArtifactRecord",
+    "Codec",
     "CorpusSpec",
     "CostModel",
+    "EvictionManager",
+    "EvictionPolicy",
+    "GainLossEviction",
     "IntermediateStore",
+    "LRUEviction",
+    "LocalFSBackend",
+    "MemoryBackend",
     "ModuleRef",
     "ModuleSpec",
     "PolicyReport",
     "PrefixKey",
     "ProvenanceLog",
+    "PutResult",
     "RISP",
     "Recommendation",
     "Rule",
@@ -26,19 +44,25 @@ __all__ = [
     "RunRecord",
     "RunResult",
     "StoragePolicy",
+    "StorageBackend",
     "TSAR",
     "TSFR",
     "TSPAR",
+    "TieredBackend",
     "ToolState",
     "Workflow",
     "WorkflowError",
     "WorkflowExecutor",
     "adaptive_policy",
     "adaptive_risp",
+    "available_codecs",
     "evaluate_all",
     "evaluate_policy",
+    "gain_loss_ratio",
     "galaxy_ch4_corpus",
     "galaxy_ch5_corpus",
     "generate_corpus",
     "make_policy",
+    "register_codec",
+    "resolve_codec",
 ]

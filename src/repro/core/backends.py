@@ -1,0 +1,216 @@
+"""Pluggable storage backends for the intermediate-data store.
+
+``IntermediateStore`` owns *what* an artifact is (pytree flattening, per-shard
+blobs, the JSON manifest, compression via a ``Codec``); a ``StorageBackend``
+owns only *where bytes live*.  An artifact is a namespace ``key`` holding
+named blobs (``manifest.json``, ``skeleton.pkl``, ``leaf0.bin.zst``, ...);
+store-level metadata (``index.json``) lives beside the namespaces.
+
+Backends:
+
+  * ``LocalFSBackend`` — the seed behavior: content-addressed directories
+    ``objects/<h[:2]>/<h>/`` under a root path (the thesis' HDFS-write
+    analogue, Ch. 3.4).
+  * ``MemoryBackend``  — dict-of-dicts; for tests and as the hot tier.
+  * ``TieredBackend``  — a bounded hot tier over a durable cold tier with
+    LRU promote/demote; reads served hot when possible, writes go cold
+    (authoritative) and are cached hot.
+"""
+from __future__ import annotations
+
+import hashlib
+import shutil
+from abc import ABC, abstractmethod
+from collections import OrderedDict
+from pathlib import Path
+
+
+def _key_hash(key: str) -> str:
+    return hashlib.sha256(key.encode()).hexdigest()[:24]
+
+
+class StorageBackend(ABC):
+    """Byte-level persistence for artifact namespaces."""
+
+    name = "abstract"
+
+    @abstractmethod
+    def write_blob(self, key: str, name: str, data: bytes) -> int:
+        """Persist ``data`` as blob ``name`` of artifact ``key``; return bytes stored."""
+
+    @abstractmethod
+    def read_blob(self, key: str, name: str) -> bytes:
+        """Read blob ``name`` of artifact ``key`` (KeyError/FileNotFoundError if absent)."""
+
+    @abstractmethod
+    def delete(self, key: str) -> None:
+        """Drop every blob of artifact ``key`` (no-op if absent)."""
+
+    @abstractmethod
+    def exists(self, key: str) -> bool:
+        """True iff artifact ``key`` has a committed manifest."""
+
+    @abstractmethod
+    def write_meta(self, name: str, text: str) -> None:
+        """Persist store-level metadata (e.g. ``index.json``)."""
+
+    @abstractmethod
+    def read_meta(self, name: str) -> str | None:
+        """Read store-level metadata, or None if absent."""
+
+
+class LocalFSBackend(StorageBackend):
+    """Filesystem backend with the seed's content-addressed layout."""
+
+    name = "localfs"
+
+    def __init__(self, root: str | Path) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def _obj_dir(self, key: str) -> Path:
+        h = _key_hash(key)
+        return self.root / "objects" / h[:2] / h
+
+    def write_blob(self, key: str, name: str, data: bytes) -> int:
+        d = self._obj_dir(key)
+        d.mkdir(parents=True, exist_ok=True)
+        (d / name).write_bytes(data)
+        return len(data)
+
+    def read_blob(self, key: str, name: str) -> bytes:
+        return (self._obj_dir(key) / name).read_bytes()
+
+    def delete(self, key: str) -> None:
+        d = self._obj_dir(key)
+        if d.exists():
+            shutil.rmtree(d)
+
+    def exists(self, key: str) -> bool:
+        return (self._obj_dir(key) / "manifest.json").exists()
+
+    def write_meta(self, name: str, text: str) -> None:
+        (self.root / name).write_text(text)
+
+    def read_meta(self, name: str) -> str | None:
+        p = self.root / name
+        return p.read_text() if p.exists() else None
+
+
+class MemoryBackend(StorageBackend):
+    """In-process backend: tests, ephemeral stores, and hot-tier caching."""
+
+    name = "memory"
+
+    def __init__(self) -> None:
+        self._objects: dict[str, dict[str, bytes]] = {}
+        self._meta: dict[str, str] = {}
+
+    def write_blob(self, key: str, name: str, data: bytes) -> int:
+        self._objects.setdefault(key, {})[name] = data
+        return len(data)
+
+    def read_blob(self, key: str, name: str) -> bytes:
+        return self._objects[key][name]
+
+    def delete(self, key: str) -> None:
+        self._objects.pop(key, None)
+
+    def exists(self, key: str) -> bool:
+        return "manifest.json" in self._objects.get(key, ())
+
+    def write_meta(self, name: str, text: str) -> None:
+        self._meta[name] = text
+
+    def read_meta(self, name: str) -> str | None:
+        return self._meta.get(name)
+
+    def nbytes(self, key: str) -> int:
+        return sum(len(b) for b in self._objects.get(key, {}).values())
+
+
+class TieredBackend(StorageBackend):
+    """Hot/cold tiering: bounded memory tier over a durable backend.
+
+    Writes land on ``cold`` (authoritative) and are mirrored hot; reads hit
+    the hot tier first and promote on miss.  When the hot tier exceeds
+    ``hot_capacity_bytes``, least-recently-used *artifacts* (whole
+    namespaces, so a manifest never outlives its blobs) are demoted —
+    dropped from memory only; cold copies are untouched.
+    """
+
+    name = "tiered"
+
+    def __init__(
+        self,
+        cold: StorageBackend,
+        hot: MemoryBackend | None = None,
+        hot_capacity_bytes: int = 256 * 1024 * 1024,
+    ) -> None:
+        self.cold = cold
+        self.hot = hot or MemoryBackend()
+        self.hot_capacity_bytes = hot_capacity_bytes
+        self._lru: OrderedDict[str, None] = OrderedDict()  # key -> (LRU order)
+        self._hot_nbytes = 0  # running total; avoids O(keys) rescans
+        self.promotions = 0
+        self.demotions = 0
+
+    # -- hot-tier bookkeeping ------------------------------------------------
+    def _touch(self, key: str) -> None:
+        self._lru.pop(key, None)
+        self._lru[key] = None
+
+    def _hot_bytes(self) -> int:
+        return self._hot_nbytes
+
+    def _hot_write(self, key: str, name: str, data: bytes) -> None:
+        prev = self.hot._objects.get(key, {}).get(name)
+        self._hot_nbytes += len(data) - (len(prev) if prev is not None else 0)
+        self.hot.write_blob(key, name, data)
+        self._touch(key)
+
+    def _hot_drop(self, key: str) -> None:
+        self._hot_nbytes -= self.hot.nbytes(key)
+        self.hot.delete(key)
+        self._lru.pop(key, None)
+
+    def _shrink_hot(self) -> None:
+        while self._lru and self._hot_nbytes > self.hot_capacity_bytes:
+            victim = next(iter(self._lru))
+            self._hot_drop(victim)
+            self.demotions += 1
+
+    # -- StorageBackend ------------------------------------------------------
+    def write_blob(self, key: str, name: str, data: bytes) -> int:
+        n = self.cold.write_blob(key, name, data)
+        if len(data) <= self.hot_capacity_bytes:
+            self._hot_write(key, name, data)
+            self._shrink_hot()
+        return n
+
+    def read_blob(self, key: str, name: str) -> bytes:
+        try:
+            data = self.hot.read_blob(key, name)
+            self._touch(key)
+            return data
+        except KeyError:
+            pass
+        data = self.cold.read_blob(key, name)
+        if len(data) <= self.hot_capacity_bytes:
+            self._hot_write(key, name, data)
+            self.promotions += 1
+            self._shrink_hot()
+        return data
+
+    def delete(self, key: str) -> None:
+        self._hot_drop(key)
+        self.cold.delete(key)
+
+    def exists(self, key: str) -> bool:
+        return self.hot.exists(key) or self.cold.exists(key)
+
+    def write_meta(self, name: str, text: str) -> None:
+        self.cold.write_meta(name, text)
+
+    def read_meta(self, name: str) -> str | None:
+        return self.cold.read_meta(name)

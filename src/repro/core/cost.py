@@ -67,3 +67,21 @@ class CostModel:
 
     def should_store(self, prefix: PrefixKey, measured_exec_s: float | None = None) -> bool:
         return self.gain(prefix, measured_exec_s) > 0.0
+
+    # -- gain-loss ratio (arXiv 2202.06473) -----------------------------------
+    def recompute_seconds(
+        self, prefix: PrefixKey, measured_exec_s: float | None = None
+    ) -> float:
+        """Best estimate of re-executing the prefix from scratch — the *gain*
+        numerator of the eviction criterion.  Prefers the EMA (covers modules
+        skipped in the measuring run) but never under-reports a measurement."""
+        return max(self.prefix_exec_seconds(prefix), measured_exec_s or 0.0)
+
+    def gain_per_byte(
+        self, prefix: PrefixKey, measured_exec_s: float | None = None
+    ) -> float:
+        """Seconds saved per stored byte if this prefix's artifact is kept —
+        the same ratio :func:`repro.core.eviction.gain_loss_ratio` computes
+        from store records, here predicted *before* the artifact exists."""
+        b = self.out_bytes(prefix.modules[-1])
+        return self.gain(prefix, measured_exec_s) / max(b, 1.0)

@@ -74,6 +74,12 @@ class WorkflowExecutor:
             self.cost_model = CostModel(store=self.store)
         if self.admission not in ("always", "t1_gt_t2"):
             raise ValueError(f"unknown admission mode {self.admission!r}")
+        # budget evictions must also clear the policy's stored-key map, or the
+        # policy would keep recommending reuse of artifacts that are gone
+        self.store.add_evict_listener(self._on_store_evict)
+
+    def _on_store_evict(self, key: str) -> None:
+        self.policy.stored.pop(key, None)
 
     # -- registration ---------------------------------------------------------
     def register(self, spec: ModuleSpec) -> None:
@@ -169,7 +175,12 @@ class WorkflowExecutor:
         for prefix in rec.store:
             depth = prefix.depth
             if depth not in stage_values:
-                continue  # inside the skipped prefix: already stored previously
+                # inside the skipped prefix: normally stored by an earlier run,
+                # but a budget eviction may have dropped it while a deeper
+                # prefix survived — don't let the policy believe it exists
+                if not self.store.has(prefix.key(self.policy.with_state)):
+                    self.policy.stored.pop(prefix.key(self.policy.with_state), None)
+                continue
             if self.admission == "t1_gt_t2":
                 assert self.cost_model is not None
                 measured = sum(module_seconds[:depth])
@@ -177,9 +188,19 @@ class WorkflowExecutor:
                     self.policy.stored.pop(prefix.key(self.policy.with_state), None)
                     continue
             key = prefix.key(self.policy.with_state)
-            res = self.store.put(key, stage_values[depth])
+            assert self.cost_model is not None
+            res = self.store.put(
+                key,
+                stage_values[depth],
+                compute_seconds=self.cost_model.recompute_seconds(
+                    prefix, sum(module_seconds[:depth]) or None
+                ),
+            )
             store_s += res.seconds
-            stored_keys.append(key)
+            if res.admitted:
+                stored_keys.append(key)
+            else:  # artifact exceeds the whole store budget: never stored
+                self.policy.stored.pop(key, None)
 
         total = time.perf_counter() - t_start
         result = RunResult(

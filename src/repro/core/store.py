@@ -2,33 +2,40 @@
 
 The thesis stored intermediate states in HDFS via Python pickle (Ch. 3.4).
 Here each artifact is a pytree of arrays; every *addressable shard* of every
-leaf is written as an independent zstd-compressed npy blob, so on a multi-host
-pod each host persists exactly its local shards (the HDFS-write analogue) and
-restores them without gathering.  A JSON manifest records the global
-shapes/dtypes/shard indices plus measured save/load timings — the inputs to
-the thesis' ``T1 > T2`` admission test (Eq. 4.9).
+leaf is written as an independent compressed blob, so on a multi-host pod each
+host persists exactly its local shards (the HDFS-write analogue) and restores
+them without gathering.  A JSON manifest records the global shapes/dtypes/
+shard indices plus measured save/load timings — the inputs to the thesis'
+``T1 > T2`` admission test (Eq. 4.9).
+
+The store splits three concerns across three pluggable layers:
+
+  * serialization — pytree flattening, manifests, codec compression (here);
+  * persistence   — a :class:`~repro.core.backends.StorageBackend`
+    (filesystem, memory, or tiered hot/cold);
+  * retention     — an optional :class:`~repro.core.eviction.EvictionManager`
+    that keeps ``total_disk_bytes`` under ``capacity_bytes`` by gain-loss-
+    ratio (or LRU) eviction, notifying listeners (the executor's policy
+    bookkeeping) of every evicted key.
 """
 from __future__ import annotations
 
-import hashlib
-import io
 import json
 import pickle
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any
+from typing import Any, Callable
 
 import numpy as np
-import zstandard as zstd
 
 import jax
 
+from .backends import LocalFSBackend, StorageBackend
+from .codecs import Codec, resolve_codec
+from .eviction import EvictionContext, EvictionManager
+
 _LEAF = "__repro_leaf__"
-
-
-def _key_hash(key: str) -> str:
-    return hashlib.sha256(key.encode()).hexdigest()[:24]
 
 
 @dataclass
@@ -40,6 +47,12 @@ class ArtifactRecord:
     load_s: float | None = None
     n_loads: int = 0
     created_at: float = field(default_factory=time.time)
+    compute_s: float | None = None  # producer-reported recompute seconds
+    last_used_at: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not self.last_used_at:
+            self.last_used_at = self.created_at
 
 
 @dataclass
@@ -49,65 +62,155 @@ class PutResult:
     nbytes_disk: int
     seconds: float
     deduped: bool = False
+    admitted: bool = True  # False: artifact exceeded the whole budget
+    evicted: tuple[str, ...] = ()  # keys evicted to make room
 
 
 class IntermediateStore:
-    """Content-addressed artifact store with per-shard blobs."""
+    """Content-addressed artifact store with per-shard blobs.
 
-    def __init__(self, root: str | Path, compression_level: int = 3) -> None:
-        self.root = Path(root)
-        self.root.mkdir(parents=True, exist_ok=True)
-        self._cctx = zstd.ZstdCompressor(level=compression_level)
-        self._dctx = zstd.ZstdDecompressor()
+    Parameters
+    ----------
+    root: directory for the default :class:`LocalFSBackend`; ignored when an
+        explicit ``backend`` is given.
+    compression_level: level for the selected codec (zstd/zlib).
+    backend: storage backend; defaults to ``LocalFSBackend(root)``.
+    codec: codec name (``"zstd"``/``"zlib"``/``"none"``) or ``Codec``;
+        ``None`` picks the best available (zstd if installed, else zlib).
+    capacity_bytes: optional storage budget; when set, every ``put`` evicts
+        lowest-value artifacts (per ``eviction``) until the store fits.
+    eviction: ``"gain_loss"`` (default) or ``"lru"``, or an
+        :class:`EvictionPolicy` instance.
+    """
+
+    def __init__(
+        self,
+        root: str | Path | None = None,
+        compression_level: int = 3,
+        *,
+        backend: StorageBackend | None = None,
+        codec: str | Codec | None = None,
+        capacity_bytes: int | None = None,
+        eviction: str | Any = "gain_loss",
+    ) -> None:
+        if backend is None:
+            if root is None:
+                raise ValueError("pass either root or backend")
+            backend = LocalFSBackend(root)
+        self.backend = backend
+        self.codec = resolve_codec(codec, level=compression_level)
+        self.evictor = EvictionManager(capacity_bytes, eviction)
         self.records: dict[str, ArtifactRecord] = {}
+        self._evict_listeners: list[Callable[[str], None]] = []
+        self._gets_since_flush = 0
         self._load_index()
 
-    # -- index persistence -------------------------------------------------
-    @property
-    def _index_path(self) -> Path:
-        return self.root / "index.json"
+    _GET_FLUSH_EVERY = 16  # persist hit stats at most every N get() calls
 
+    @property
+    def capacity_bytes(self) -> int | None:
+        return self.evictor.capacity_bytes
+
+    # -- index persistence -------------------------------------------------
     def _load_index(self) -> None:
-        if self._index_path.exists():
-            raw = json.loads(self._index_path.read_text())
-            for k, v in raw.items():
+        raw = self.backend.read_meta("index.json")
+        if raw:
+            for k, v in json.loads(raw).items():
                 self.records[k] = ArtifactRecord(**v)
 
     def _flush_index(self) -> None:
-        self._index_path.write_text(
-            json.dumps({k: vars(v) for k, v in self.records.items()})
+        self.backend.write_meta(
+            "index.json", json.dumps({k: vars(v) for k, v in self.records.items()})
         )
 
     # -- helpers -------------------------------------------------------------
-    def _obj_dir(self, key: str) -> Path:
-        h = _key_hash(key)
-        return self.root / "objects" / h[:2] / h
-
     def has(self, key: str) -> bool:
-        return key in self.records and self._obj_dir(key).exists()
+        return key in self.records and self.backend.exists(key)
 
-    def _write_blob(self, path: Path, arr: np.ndarray) -> int:
+    def _blob_name(self, stem: str) -> str:
+        return f"{stem}.npy{self.codec.suffix}"
+
+    def _write_blob(self, key: str, name: str, arr: np.ndarray) -> int:
         # raw bytes + manifest-recorded dtype/shape: survives ml_dtypes
         # (bfloat16 etc.) that the npy format would degrade to void types
-        blob = self._cctx.compress(np.ascontiguousarray(arr).tobytes())
-        path.write_bytes(blob)
-        return len(blob)
+        blob = self.codec.compress(np.ascontiguousarray(arr).tobytes())
+        return self.backend.write_blob(key, name, blob)
 
-    def _read_blob(self, path: Path, dtype: str, shape: list[int]) -> np.ndarray:
-        raw = self._dctx.decompress(path.read_bytes())
+    def _read_blob(
+        self, key: str, name: str, codec: Codec, dtype: str, shape: list[int]
+    ) -> np.ndarray:
+        raw = codec.decompress(self.backend.read_blob(key, name))
         return np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape)
 
+    # -- eviction ------------------------------------------------------------
+    def add_evict_listener(self, fn: Callable[[str], None]) -> None:
+        """``fn(key)`` is called for every artifact the budget evicts."""
+        if fn not in self._evict_listeners:
+            self._evict_listeners.append(fn)
+
+    def remove_evict_listener(self, fn: Callable[[str], None]) -> None:
+        """Unregister a listener (e.g. when an executor is discarded but the
+        store lives on)."""
+        if fn in self._evict_listeners:
+            self._evict_listeners.remove(fn)
+
+    def evict(self, key: str) -> None:
+        """Drop an artifact and notify listeners (policy bookkeeping)."""
+        self._evict_batch([key])
+        self._flush_index()
+
+    def _evict_batch(self, keys: list[str]) -> None:
+        """Drop artifacts + notify listeners without flushing per victim;
+        callers flush the index once afterwards."""
+        for key in keys:
+            if key in self.records:
+                self.backend.delete(key)
+                del self.records[key]
+            for fn in self._evict_listeners:
+                fn(key)
+
+    def _enforce_budget(self, incoming: str) -> tuple[str, ...]:
+        victims = self.evictor.select_victims(
+            self.records,
+            self.total_disk_bytes,
+            ctx=EvictionContext(load_bps=self.load_throughput()),
+            incoming=incoming,
+        )
+        self._evict_batch(victims)
+        return tuple(victims)
+
     # -- public API ----------------------------------------------------------
-    def put(self, key: str, value: Any) -> PutResult:
+    def put(
+        self, key: str, value: Any, *, compute_seconds: float | None = None
+    ) -> PutResult:
+        """Persist a pytree under ``key``.
+
+        ``compute_seconds`` is the producer's measured cost of recomputing the
+        value (the executor passes the prefix's module seconds) — the *gain*
+        numerator of the eviction criterion.
+        """
         if self.has(key):
             rec = self.records[key]
+            if compute_seconds is not None:
+                rec.compute_s = compute_seconds
             return PutResult(key, rec.nbytes_raw, rec.nbytes_disk, 0.0, deduped=True)
         t0 = time.perf_counter()
-        d = self._obj_dir(key)
-        d.mkdir(parents=True, exist_ok=True)
 
         leaves, treedef = jax.tree_util.tree_flatten(value)
-        manifest: dict[str, Any] = {"key": key, "leaves": []}
+        # pre-write admission: an artifact whose RAW size already exceeds the
+        # whole budget is rejected before any bytes are compressed or written
+        # (compression below 1x would not change the verdict in practice)
+        est_raw = sum(int(getattr(leaf, "nbytes", 0) or 0) for leaf in leaves)
+        if not self.evictor.admits(est_raw) and self.codec.name == "none":
+            return PutResult(key, est_raw, est_raw, 0.0, admitted=False)
+        if (
+            self.evictor.capacity_bytes is not None
+            and est_raw > 4 * self.evictor.capacity_bytes
+        ):
+            # even generous 4x compression could not fit it; don't write 100GB
+            # into a 1GB-budget store just to find out
+            return PutResult(key, est_raw, est_raw, 0.0, admitted=False)
+        manifest: dict[str, Any] = {"key": key, "codec": self.codec.name, "leaves": []}
         nbytes_raw = 0
         nbytes_disk = 0
         for i, leaf in enumerate(leaves):
@@ -120,15 +223,15 @@ class IntermediateStore:
                 entry["shards"] = []
                 for s in leaf.addressable_shards:
                     arr = np.asarray(s.data)
-                    p = d / f"leaf{i}.shard{s.device.id}.npy.zst"
-                    nbytes_disk += self._write_blob(p, arr)
+                    name = self._blob_name(f"leaf{i}.shard{s.device.id}")
+                    nbytes_disk += self._write_blob(key, name, arr)
                     nbytes_raw += arr.nbytes
                     entry["shards"].append(
                         {
                             "device": s.device.id,
                             "index": [[sl.start, sl.stop] for sl in s.index],
                             "shape": list(arr.shape),
-                            "file": p.name,
+                            "file": name,
                         }
                     )
             else:
@@ -136,36 +239,54 @@ class IntermediateStore:
                 entry["kind"] = "dense"
                 entry["shape"] = list(arr.shape)
                 entry["dtype"] = str(arr.dtype)
-                p = d / f"leaf{i}.npy.zst"
-                nbytes_disk += self._write_blob(p, arr)
+                name = self._blob_name(f"leaf{i}")
+                nbytes_disk += self._write_blob(key, name, arr)
                 nbytes_raw += arr.nbytes
-                entry["file"] = p.name
+                entry["file"] = name
             manifest["leaves"].append(entry)
 
-        (d / "skeleton.pkl").write_bytes(pickle.dumps(treedef))
-        (d / "manifest.json").write_text(json.dumps(manifest))
+        if not self.evictor.admits(nbytes_disk):
+            # bigger than the whole budget: storing it could never fit
+            self.backend.delete(key)
+            return PutResult(key, nbytes_raw, nbytes_disk, 0.0, admitted=False)
+
+        self.backend.write_blob(key, "skeleton.pkl", pickle.dumps(treedef))
+        self.backend.write_blob(key, "manifest.json", json.dumps(manifest).encode())
         dt = time.perf_counter() - t0
-        self.records[key] = ArtifactRecord(key, nbytes_raw, nbytes_disk, dt)
+        self.records[key] = ArtifactRecord(
+            key, nbytes_raw, nbytes_disk, dt, compute_s=compute_seconds
+        )
+        evicted = self._enforce_budget(incoming=key)
         self._flush_index()
-        return PutResult(key, nbytes_raw, nbytes_disk, dt)
+        # a value-aware policy may decide the newcomer itself is the victim:
+        # it displaces only artifacts worth less per byte than itself
+        return PutResult(
+            key, nbytes_raw, nbytes_disk, dt, admitted=key not in evicted,
+            evicted=evicted,
+        )
 
     def get(self, key: str, sharding: jax.sharding.Sharding | None = None) -> Any:
         if not self.has(key):
             raise KeyError(key)
         t0 = time.perf_counter()
-        d = self._obj_dir(key)
-        manifest = json.loads((d / "manifest.json").read_text())
-        treedef = pickle.loads((d / "skeleton.pkl").read_bytes())
+        manifest = json.loads(self.backend.read_blob(key, "manifest.json"))
+        treedef = pickle.loads(self.backend.read_blob(key, "skeleton.pkl"))
+        # pre-codec manifests (seed layout) were always zstd-compressed
+        codec = resolve_codec(manifest.get("codec", "zstd"))
         leaves = []
         for entry in manifest["leaves"]:
             if entry["kind"] == "sharded":
                 out = np.empty(entry["shape"], dtype=np.dtype(entry["dtype"]))
                 for s in entry["shards"]:
                     idx = tuple(slice(a, b) for a, b in s["index"])
-                    out[idx] = self._read_blob(d / s["file"], entry["dtype"], s["shape"])
+                    out[idx] = self._read_blob(
+                        key, s["file"], codec, entry["dtype"], s["shape"]
+                    )
                 arr = out
             else:
-                arr = self._read_blob(d / entry["file"], entry["dtype"], entry["shape"])
+                arr = self._read_blob(
+                    key, entry["file"], codec, entry["dtype"], entry["shape"]
+                )
             if sharding is not None:
                 leaves.append(jax.device_put(arr, sharding))
             else:
@@ -175,15 +296,19 @@ class IntermediateStore:
         rec = self.records[key]
         rec.load_s = dt
         rec.n_loads += 1
+        rec.last_used_at = time.time()
+        # hit statistics drive eviction ranking, so they must survive restarts
+        # of read-only sessions; flush with bounded frequency to keep get()
+        # from serializing the whole index on every read
+        self._gets_since_flush += 1
+        if self._gets_since_flush >= self._GET_FLUSH_EVERY:
+            self._gets_since_flush = 0
+            self._flush_index()
         return value
 
     def delete(self, key: str) -> None:
         if key in self.records:
-            d = self._obj_dir(key)
-            if d.exists():
-                for p in d.iterdir():
-                    p.unlink()
-                d.rmdir()
+            self.backend.delete(key)
             del self.records[key]
             self._flush_index()
 

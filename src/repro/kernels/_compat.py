@@ -1,0 +1,10 @@
+"""Pallas-TPU API compatibility across jax releases.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; accept
+either so the kernels run on both old (0.4.x) and current jax.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

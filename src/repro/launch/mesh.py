@@ -32,3 +32,12 @@ def make_smoke_mesh(*, multi_pod: bool = False, devices=None) -> jax.sharding.Me
     if devices is None:
         devices = jax.devices()
     return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def mesh_context(mesh: jax.sharding.Mesh):
+    """``jax.set_mesh(mesh)`` where available (jax >= 0.5); otherwise enter the
+    Mesh directly (the pre-0.5 ambient-mesh context manager)."""
+    set_mesh = getattr(jax, "set_mesh", None) or getattr(
+        jax.sharding, "use_mesh", None
+    )
+    return set_mesh(mesh) if set_mesh is not None else mesh

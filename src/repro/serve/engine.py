@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import LMConfig
+from ..core.eviction import EvictionContext, EvictionManager
 from ..core.risp import RISP, StoragePolicy
+from ..core.store import ArtifactRecord
 from ..core.workflow import ModuleRef, Workflow
 from ..models import transformer
 
@@ -50,9 +52,15 @@ class ServeEngine:
     chunk: int = 32
     policy: StoragePolicy = field(default_factory=RISP)
     greedy: bool = True
+    # KV-snapshot memory budget: same gain-loss retention as the disk store
+    snapshot_budget_bytes: int | None = None
+    eviction: str = "gain_loss"
 
     def __post_init__(self) -> None:
         self._snapshots: dict[str, tuple[Any, int]] = {}  # key -> (host cache, len)
+        self._snap_records: dict[str, ArtifactRecord] = {}
+        self._evictor = EvictionManager(self.snapshot_budget_bytes, self.eviction)
+        self._chunk_prefill_s = 0.0  # EMA seconds to prefill one chunk
         self._prefill = jax.jit(
             lambda p, t, c, l: transformer.prefill_chunk(p, self.cfg, t, c, l)
         )
@@ -65,12 +73,36 @@ class ServeEngine:
         mods = tuple(ModuleRef(_chunk_id(c)) for c in chunks)
         return Workflow("prompts", mods, workflow_id=f"req{self.policy.n_pipelines}")
 
-    def _snapshot(self, key: str, cache: Any, length: int) -> None:
+    def _snapshot(self, key: str, cache: Any, length: int, depth: int) -> bool:
+        """Store a KV snapshot; returns False if the budget rejects it."""
         host = jax.tree_util.tree_map(lambda a: np.asarray(a), cache)
+        nbytes = sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(host))
+        if not self._evictor.admits(nbytes):
+            return False
         self._snapshots[key] = (host, length)
+        # recompute cost of this snapshot = re-prefilling ``depth`` chunks
+        self._snap_records[key] = ArtifactRecord(
+            key, nbytes, nbytes, save_s=0.0, compute_s=self._chunk_prefill_s * depth
+        )
+        victims = self._evictor.select_victims(
+            self._snap_records, self.snapshot_bytes(),
+            ctx=EvictionContext(load_bps=4e9), incoming=key,
+        )
+        for victim in victims:
+            self._drop_snapshot(victim)
+        return key not in victims
+
+    def _drop_snapshot(self, key: str) -> None:
+        self._snapshots.pop(key, None)
+        self._snap_records.pop(key, None)
+        self.policy.stored.pop(key, None)
 
     def _restore(self, key: str) -> tuple[Any, int]:
         host, length = self._snapshots[key]
+        rec = self._snap_records.get(key)
+        if rec is not None:
+            rec.n_loads += 1
+            rec.last_used_at = time.time()
         return jax.tree_util.tree_map(jnp.asarray, host), length
 
     # -- generation ---------------------------------------------------------
@@ -104,19 +136,29 @@ class ServeEngine:
         boundary_caches: dict[int, tuple[Any, int]] = {}
         for i in range(start, len(chunks)):
             tok = jnp.asarray(chunks[i][None], jnp.int32)
+            tc = time.perf_counter()
             logits, cache, cache_len = self._prefill(self.params, tok, cache, cache_len)
+            jax.block_until_ready(logits)
+            dt = time.perf_counter() - tc
+            self._chunk_prefill_s = (
+                dt if not self._chunk_prefill_s
+                else 0.3 * dt + 0.7 * self._chunk_prefill_s
+            )
             boundary_caches[i + 1] = (cache, int(cache_len[0]))
         prefill_s = time.perf_counter() - t0
 
         # store admitted prefixes (only those whose boundary we computed)
         stored = 0
         for prefix in rec.store:
+            key = prefix.key(self.policy.with_state)
             if prefix.depth in boundary_caches:
                 c, ln = boundary_caches[prefix.depth]
-                self._snapshot(prefix.key(self.policy.with_state), c, ln)
-                stored += 1
+                if self._snapshot(key, c, ln, prefix.depth):
+                    stored += 1
+                else:  # snapshot alone exceeds the whole budget
+                    self.policy.stored.pop(key, None)
             else:
-                self.policy.stored.pop(prefix.key(self.policy.with_state), None)
+                self.policy.stored.pop(key, None)
 
         # decode
         t1 = time.perf_counter()
@@ -164,6 +206,10 @@ class ServeEngine:
     @property
     def n_snapshots(self) -> int:
         return len(self._snapshots)
+
+    @property
+    def n_snapshot_evictions(self) -> int:
+        return self._evictor.n_evictions
 
     def snapshot_bytes(self) -> int:
         total = 0

@@ -1,0 +1,46 @@
+"""Optional-hypothesis shim.
+
+`hypothesis` is an optional dev dependency (see pyproject.toml extras).  On a
+bare environment the property-based tests should *skip*, not break collection
+of the whole module.  Import `given`/`settings`/`st`/`HealthCheck` from here
+instead of from hypothesis directly.
+"""
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare environments
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy construction/chaining; never actually draws."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    class HealthCheck:
+        too_slow = None
+        data_too_large = None
+        filter_too_much = None
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco

@@ -1,0 +1,174 @@
+"""Pluggable backends, codec registry, and gain-loss eviction."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    IntermediateStore,
+    LocalFSBackend,
+    MemoryBackend,
+    RISP,
+    TSAR,
+    TieredBackend,
+    WorkflowExecutor,
+    available_codecs,
+    gain_loss_ratio,
+    resolve_codec,
+)
+from repro.core.eviction import EvictionContext
+from repro.core.store import ArtifactRecord
+
+
+def _pytree():
+    return {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "b": [np.int32(7), jnp.ones((2, 2), jnp.bfloat16)],
+    }
+
+
+def _assert_roundtrip(store):
+    value = _pytree()
+    res = store.put("k", value)
+    assert res.admitted and store.has("k")
+    out = store.get("k")
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(value["a"]))
+    assert out["b"][1].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["b"][1]), np.ones((2, 2)))
+
+
+def _backends(tmp_path):
+    return {
+        "localfs": LocalFSBackend(tmp_path / "fs"),
+        "memory": MemoryBackend(),
+        "tiered": TieredBackend(LocalFSBackend(tmp_path / "cold")),
+    }
+
+
+@pytest.mark.parametrize("name", ["localfs", "memory", "tiered"])
+def test_roundtrip_each_backend(tmp_path, name):
+    _assert_roundtrip(IntermediateStore(backend=_backends(tmp_path)[name]))
+
+
+@pytest.mark.parametrize("codec", ["none", "zlib"])
+def test_roundtrip_each_codec(tmp_path, codec):
+    _assert_roundtrip(IntermediateStore(tmp_path / codec, codec=codec))
+
+
+def test_codec_registry():
+    assert {"none", "zlib"} <= set(available_codecs())
+    payload = b"abc" * 1000
+    for name in available_codecs():
+        c = resolve_codec(name)
+        assert c.decompress(c.compress(payload)) == payload
+    with pytest.raises(KeyError):
+        resolve_codec("snappy")
+
+
+def test_default_codec_is_best_available(tmp_path):
+    store = IntermediateStore(tmp_path)
+    expected = "zstd" if "zstd" in available_codecs() else "zlib"
+    assert store.codec.name == expected
+
+
+def test_tiered_serves_hot_reads_and_demotes(tmp_path):
+    cold = LocalFSBackend(tmp_path / "cold")
+    tiered = TieredBackend(cold, hot_capacity_bytes=4096)
+    store = IntermediateStore(backend=tiered, codec="none")
+    store.put("small", jnp.arange(16.0))  # fits hot
+    store.put("big", jnp.arange(2048.0))  # 8KB > hot capacity once mirrored
+    # demotion kept the hot tier under its budget, cold still has everything
+    assert tiered._hot_bytes() <= tiered.hot_capacity_bytes
+    np.testing.assert_array_equal(np.asarray(store.get("small")), np.arange(16.0))
+    np.testing.assert_array_equal(np.asarray(store.get("big")), np.arange(2048.0))
+    # reading a cold-only artifact promotes it when it fits
+    tiered._hot_drop("small")
+    before = tiered.promotions
+    store.get("small")
+    assert tiered.promotions > before  # manifest/skeleton/leaf blobs re-cached
+
+
+def test_eviction_keeps_store_under_budget(tmp_path):
+    budget = 3000
+    store = IntermediateStore(tmp_path, codec="none", capacity_bytes=budget)
+    for i in range(12):
+        store.put(f"k{i}", jnp.arange(128.0) + i, compute_seconds=0.01)
+        assert store.total_disk_bytes <= budget
+    assert len(store.records) < 12  # something was actually evicted
+    assert store.evictor.n_evictions > 0
+
+
+def test_gain_loss_prefers_precious_artifacts(tmp_path):
+    # small+expensive artifact must outlive big+cheap ones under pressure
+    store = IntermediateStore(tmp_path, codec="none", capacity_bytes=6000)
+    store.put("precious", jnp.arange(32.0), compute_seconds=120.0)
+    for i in range(8):
+        store.put(f"bulk{i}", jnp.arange(512.0) + i, compute_seconds=1e-4)
+    assert store.has("precious")
+    assert store.total_disk_bytes <= 6000
+
+
+def test_gain_loss_ratio_orders_by_value():
+    ctx = EvictionContext(load_bps=1e9)
+    precious = ArtifactRecord("p", 100, 100, save_s=0.01, compute_s=10.0)
+    cheap = ArtifactRecord("c", 1_000_000, 1_000_000, save_s=0.01, compute_s=1e-4)
+    assert gain_loss_ratio(precious, ctx) > gain_loss_ratio(cheap, ctx)
+
+
+def test_oversized_artifact_not_admitted(tmp_path):
+    store = IntermediateStore(tmp_path, codec="none", capacity_bytes=100)
+    res = store.put("huge", jnp.arange(1024.0))
+    assert not res.admitted
+    assert not store.has("huge")
+    assert store.total_disk_bytes == 0
+
+
+def test_executor_eviction_clears_policy_stored(tmp_path):
+    policy = TSAR(with_state=True)  # distinct tool states -> many distinct keys
+    store = IntermediateStore(tmp_path / "s", codec="none", capacity_bytes=4096)
+    ex = WorkflowExecutor(store=store, policy=policy)
+    ex.register_fn("double", lambda x: x * 2)
+    ex.register_fn("inc", lambda x, by=1: x + by, by=1)
+    data = jnp.arange(128.0)  # 512B per artifact
+    for i in range(20):
+        ex.run("ds", data, ["double", "inc", ("inc", {"by": i})], f"w{i}")
+        assert store.total_disk_bytes <= 4096
+    assert store.evictor.n_evictions > 0
+    # every key the policy still believes is stored must exist in the store
+    for key in policy.stored:
+        assert key in store.records, f"stale policy entry {key}"
+
+
+def test_lru_policy_available(tmp_path):
+    store = IntermediateStore(
+        tmp_path, codec="none", capacity_bytes=2000, eviction="lru"
+    )
+    for i in range(8):
+        store.put(f"k{i}", jnp.arange(128.0) + i)
+    assert store.total_disk_bytes <= 2000
+    # LRU keeps the most recent key regardless of value
+    assert store.has("k7")
+
+
+def test_index_survives_reopen_with_backend_meta(tmp_path):
+    s1 = IntermediateStore(tmp_path / "s", codec="zlib")
+    s1.put("k", jnp.arange(4), compute_seconds=0.5)
+    s2 = IntermediateStore(tmp_path / "s", codec="zlib")
+    assert s2.has("k")
+    assert s2.records["k"].compute_s == 0.5
+    np.testing.assert_array_equal(np.asarray(s2.get("k")), np.arange(4))
+
+
+def test_risp_executor_runs_on_memory_backend():
+    # end-to-end: policy + executor entirely in memory (no disk I/O)
+    ex = WorkflowExecutor(
+        store=IntermediateStore(backend=MemoryBackend(), codec="none"),
+        policy=RISP(),
+    )
+    ex.register_fn("double", lambda x: x * 2)
+    data = jnp.arange(8.0)
+    r1 = ex.run("ds", data, ["double", "double"], "w1")  # mines the rule
+    ex.run("ds", data, ["double", "double"], "w2")  # support>=2: stores
+    r3 = ex.run("ds", data, ["double", "double"], "w3")  # reuses
+    assert r3.n_skipped >= 1
+    np.testing.assert_array_equal(np.asarray(r1.output), np.asarray(r3.output))

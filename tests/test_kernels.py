@@ -5,8 +5,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.kernels.decode_attention import decode_attention, decode_attention_ref
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref

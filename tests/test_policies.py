@@ -1,6 +1,5 @@
 """Policy replay + metric invariants (unit + property tests)."""
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core import (
     TSAR,

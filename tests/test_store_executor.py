@@ -5,8 +5,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-import hypothesis.strategies as st
-from hypothesis import HealthCheck, given, settings
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core import (
     IntermediateStore,
