@@ -1,0 +1,172 @@
+"""Sequential executor vs. concurrent DagScheduler on fan-out pipelines.
+
+Workload shape: the thesis' canonical reuse scenario at DAG granularity — an
+expensive shared stem (``prep -> featurize``) fanned out into K analysis
+branches with distinct tool states.  Modules are *latency-bound*, modeling
+what SWfMS modules actually are (Galaxy tool invocations: subprocesses and
+I/O waits that release the GIL), so worker-pool parallelism buys real
+wall-clock time; each module still does a slice of numpy compute so stored
+artifacts have meaningful bytes.
+
+Baseline: today's sequential ``WorkflowExecutor`` replaying the path
+decomposition (K pipelines, stem stored once then reused — its best case).
+Against it: ``DagScheduler`` at worker counts {1, 2, 4, 8} on the fan-out
+DAG, plus a ``WorkflowService`` round of 16 concurrent submissions showing
+single-flight coalescing.  Reported per config: wall seconds, speedup vs.
+sequential, and prefix-reuse rate (fraction of nodes not recomputed).
+
+``--smoke`` shrinks latencies and worker counts for CI: it exists to catch
+scheduler deadlocks/regressions fast, not to measure.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import IntermediateStore, TSAR, WorkflowExecutor
+from repro.sched import WorkflowService
+
+
+def _make_modules(latency_s: float):
+    """Latency-bound modules: small numpy compute + external-tool wait."""
+
+    def prep(x, latency=latency_s):
+        time.sleep(latency)
+        a = np.asarray(x, np.float32)
+        return (a - a.mean()) / (a.std() + 1e-6)
+
+    def featurize(x, latency=latency_s):
+        time.sleep(latency)
+        a = np.asarray(x, np.float32)
+        return np.stack([a, a**2, np.abs(a) ** 0.5], axis=-1)
+
+    def analyze(x, q=50, latency=latency_s):
+        time.sleep(latency)
+        a = np.asarray(x, np.float32)
+        return {
+            "q": np.percentile(a, q, axis=0),
+            "mean": a.mean(axis=0),
+        }
+
+    return prep, featurize, analyze
+
+
+def _register(target, latency_s: float) -> None:
+    prep, featurize, analyze = _make_modules(latency_s)
+    target.register_fn("prep", prep)
+    target.register_fn("featurize", featurize)
+    target.register_fn("analyze", analyze, q=50)
+
+
+def _branch_steps(k: int):
+    return [("analyze", {"q": 5 + (90 * i) // max(k - 1, 1)}) for i in range(k)]
+
+
+def _sequential_baseline(data, n_branches: int, latency_s: float) -> dict:
+    """K sequential pipelines sharing the stem via the store (best case for
+    the existing executor: stem computed once, then loaded per run)."""
+    with tempfile.TemporaryDirectory() as root:
+        ex = WorkflowExecutor(
+            store=IntermediateStore(root), policy=TSAR(with_state=True)
+        )
+        _register(ex, latency_s)
+        t0 = time.perf_counter()
+        n_modules = n_skipped = 0
+        for i, branch in enumerate(_branch_steps(n_branches)):
+            r = ex.run("ds", data, ["prep", "featurize", branch], f"seq{i}")
+            n_modules += len(r.module_seconds)
+            n_skipped += r.n_skipped
+        wall = time.perf_counter() - t0
+    return {"wall": wall, "reuse": n_skipped / n_modules}
+
+
+def _dag_run(data, n_branches: int, latency_s: float, workers: int) -> dict:
+    with tempfile.TemporaryDirectory() as root:
+        svc = WorkflowService(
+            store=IntermediateStore(root),
+            policy=TSAR(with_state=True),
+            max_workers=workers,
+        )
+        _register(svc, latency_s)
+        dag = svc.dag("ds", "fanout")
+        dag.add("prep", "prep")
+        dag.add("feat", "featurize", after="prep")
+        for i, (mod, params) in enumerate(_branch_steps(n_branches)):
+            dag.add(f"an{i}", mod, params, after="feat")
+        t0 = time.perf_counter()
+        r = svc.run(dag, data)
+        wall = time.perf_counter() - t0
+        svc.close()
+    n = len(r.module_seconds)
+    return {"wall": wall, "reuse": r.n_skipped / n}
+
+
+def _service_concurrent(data, n_runs: int, latency_s: float, workers: int) -> dict:
+    """Overlapping submissions sharing one stem: single-flight coalescing."""
+    with tempfile.TemporaryDirectory() as root:
+        svc = WorkflowService(
+            store=IntermediateStore(root),
+            policy=TSAR(with_state=True),
+            max_workers=workers,
+        )
+        _register(svc, latency_s)
+        futs = []
+        for i in range(n_runs):
+            dag = svc.dag("ds", f"c{i}")
+            dag.add("prep", "prep")
+            dag.add("feat", "featurize", after="prep")
+            dag.add("an", "analyze", {"q": 5 + i}, after="feat")
+            futs.append(svc.submit(dag, data))
+        for f in futs:
+            f.result(timeout=300)
+        stats = svc.stats()
+        svc.close()
+    return {
+        "wall": stats.wall_seconds,
+        "throughput": stats.throughput_rps,
+        "reuse": stats.reuse_rate,
+        "sf_waits": stats.singleflight_waits,
+    }
+
+
+def run(smoke: bool = False) -> list[str]:
+    latency = 0.01 if smoke else 0.06
+    n_branches = 6 if smoke else 12
+    worker_counts = (1, 2) if smoke else (1, 2, 4, 8)
+    data = np.random.default_rng(0).random(4096).astype(np.float32)
+
+    lines = []
+    seq = _sequential_baseline(data, n_branches, latency)
+    lines.append(
+        f"dag_sched_sequential,{seq['wall'] * 1e6:.0f},"
+        f"baseline reuse={seq['reuse']:.2f} branches={n_branches}"
+    )
+    speedup_at = {}
+    for workers in worker_counts:
+        r = _dag_run(data, n_branches, latency, workers)
+        speedup = seq["wall"] / r["wall"] if r["wall"] > 0 else float("inf")
+        speedup_at[workers] = speedup
+        lines.append(
+            f"dag_sched_w{workers},{r['wall'] * 1e6:.0f},"
+            f"speedup={speedup:.2f}x reuse={r['reuse']:.2f}"
+        )
+    conc = _service_concurrent(
+        data, 8 if smoke else 16, latency, max(worker_counts)
+    )
+    lines.append(
+        f"dag_sched_concurrent16,{conc['wall'] * 1e6:.0f},"
+        f"throughput={conc['throughput']:.2f}rps reuse={conc['reuse']:.2f} "
+        f"singleflight_waits={conc['sf_waits']}"
+    )
+    if not smoke:
+        assert speedup_at[4] >= 2.0, (
+            f"expected >=2x at 4 workers, got {speedup_at[4]:.2f}x"
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run(smoke="--smoke" in sys.argv)))

@@ -9,6 +9,7 @@ import traceback
 def main() -> None:
     from . import (
         bench_adaptive_risp,
+        bench_dag_scheduler,
         bench_eviction,
         bench_prefix_cache,
         bench_risp,
@@ -24,6 +25,7 @@ def main() -> None:
         ("serving_load_ch6 (Table 6.1)", bench_serving_load.run),
         ("prefix_cache (beyond-paper)", bench_prefix_cache.run),
         ("eviction (gain-loss vs LRU, arXiv 2202.06473)", bench_eviction.run),
+        ("dag_scheduler (Ch. 6.3.1 DAGs, concurrent runs)", bench_dag_scheduler.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

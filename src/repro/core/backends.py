@@ -19,7 +19,9 @@ Backends:
 from __future__ import annotations
 
 import hashlib
+import os
 import shutil
+import threading
 from abc import ABC, abstractmethod
 from collections import OrderedDict
 from pathlib import Path
@@ -90,7 +92,11 @@ class LocalFSBackend(StorageBackend):
         return (self._obj_dir(key) / "manifest.json").exists()
 
     def write_meta(self, name: str, text: str) -> None:
-        (self.root / name).write_text(text)
+        # write-then-rename: concurrent readers (and crashed writers) never
+        # observe a torn index.json
+        tmp = self.root / f"{name}.tmp.{os.getpid()}.{threading.get_ident()}"
+        tmp.write_text(text)
+        os.replace(tmp, self.root / name)
 
     def read_meta(self, name: str) -> str | None:
         p = self.root / name

@@ -26,6 +26,7 @@ share this shape, so serving memory is bounded by the same policy.
 """
 from __future__ import annotations
 
+import threading
 from abc import ABC, abstractmethod
 from dataclasses import dataclass
 from typing import Any, Iterable, Mapping
@@ -105,6 +106,9 @@ class EvictionManager:
         self.policy = POLICIES[policy]() if isinstance(policy, str) else policy
         self.n_evictions = 0
         self.bytes_evicted = 0
+        # counters are read/written from concurrent scheduler workers; the
+        # store additionally holds its own lock around select_victims calls
+        self._lock = threading.Lock()
 
     def admits(self, nbytes: int) -> bool:
         """A single artifact larger than the whole budget is never admitted."""
@@ -151,6 +155,7 @@ class EvictionManager:
             excess -= records[k].nbytes_disk
         if excess > 0 and incoming is not None and incoming_score is not None:
             victims = [incoming]  # newcomer can't pay for the bytes it needs
-        self.n_evictions += len(victims)
-        self.bytes_evicted += sum(records[k].nbytes_disk for k in victims)
+        with self._lock:
+            self.n_evictions += len(victims)
+            self.bytes_evicted += sum(records[k].nbytes_disk for k in victims)
         return victims

@@ -60,6 +60,66 @@ def _nbytes(value: Any) -> int:
     return int(total)
 
 
+# -- shared helpers (sequential executor + repro.sched.DagScheduler) ----------
+def probe_reusable_prefix(
+    store: IntermediateStore,
+    policy: StoragePolicy,
+    candidate: PrefixKey | None,
+) -> tuple[PrefixKey | None, Any, float]:
+    """Load the longest stored prefix at-or-below ``candidate``.
+
+    Walks parents of ``candidate`` until one has a live artifact; stale
+    policy bookkeeping for evicted prefixes is dropped along the way.
+    Returns ``(prefix, value, load_seconds)`` — ``(None, None, 0.0)`` when
+    nothing is reusable.
+    """
+    while candidate is not None:
+        key = candidate.key(policy.with_state)
+        if store.has(key):
+            t0 = time.perf_counter()
+            try:
+                value = store.get(key)
+            except KeyError:  # evicted between has() and get() by another run
+                policy.stored.pop(key, None)
+                candidate = candidate.parent()
+                continue
+            return candidate, value, time.perf_counter() - t0
+        # artifact evicted: drop stale bookkeeping, try shorter prefix
+        policy.stored.pop(key, None)
+        candidate = candidate.parent()
+    return None, None, 0.0
+
+
+def admit_and_store(
+    store: IntermediateStore,
+    policy: StoragePolicy,
+    cost_model: CostModel,
+    admission: str,
+    prefix: PrefixKey,
+    value: Any,
+    measured_exec_s: float | None,
+) -> tuple[str | None, float]:
+    """Run one policy-recommended store through cost gating + budget admission.
+
+    Returns ``(key, seconds)`` with ``key=None`` when the Eq. 4.9 gate or the
+    store budget rejected the artifact (policy bookkeeping is cleaned up so it
+    is never recommended for reuse).
+    """
+    key = prefix.key(policy.with_state)
+    if admission == "t1_gt_t2" and not cost_model.should_store(prefix, measured_exec_s):
+        policy.stored.pop(key, None)
+        return None, 0.0
+    res = store.put(
+        key,
+        value,
+        compute_seconds=cost_model.recompute_seconds(prefix, measured_exec_s),
+    )
+    if not res.admitted:  # artifact exceeds the whole store budget: never stored
+        policy.stored.pop(key, None)
+        return None, res.seconds
+    return key, res.seconds
+
+
 @dataclass
 class WorkflowExecutor:
     store: IntermediateStore
@@ -127,23 +187,11 @@ class WorkflowExecutor:
         rec: Recommendation = self.policy.step(wf)
 
         # 1) reuse the longest stored prefix whose artifact still exists
-        reused: PrefixKey | None = None
-        load_s = 0.0
-        start_idx = 0
-        value = data
-        candidate = rec.reuse
-        while candidate is not None:
-            key = candidate.key(self.policy.with_state)
-            if self.store.has(key):
-                t0 = time.perf_counter()
-                value = self.store.get(key)
-                load_s = time.perf_counter() - t0
-                reused = candidate
-                start_idx = candidate.depth
-                break
-            # artifact evicted: drop stale bookkeeping, try shorter prefix
-            self.policy.stored.pop(key, None)
-            candidate = candidate.parent()
+        reused, loaded, load_s = probe_reusable_prefix(
+            self.store, self.policy, rec.reuse
+        )
+        start_idx = reused.depth if reused is not None else 0
+        value = loaded if reused is not None else data
 
         # 2) execute the suffix, retaining stage outputs for storing
         module_seconds = [0.0] * len(wf)
@@ -172,6 +220,7 @@ class WorkflowExecutor:
         # 3) store what the policy admitted (cost-gated if requested)
         stored_keys: list[str] = []
         store_s = 0.0
+        assert self.cost_model is not None
         for prefix in rec.store:
             depth = prefix.depth
             if depth not in stage_values:
@@ -181,26 +230,18 @@ class WorkflowExecutor:
                 if not self.store.has(prefix.key(self.policy.with_state)):
                     self.policy.stored.pop(prefix.key(self.policy.with_state), None)
                 continue
-            if self.admission == "t1_gt_t2":
-                assert self.cost_model is not None
-                measured = sum(module_seconds[:depth])
-                if not self.cost_model.should_store(prefix, measured or None):
-                    self.policy.stored.pop(prefix.key(self.policy.with_state), None)
-                    continue
-            key = prefix.key(self.policy.with_state)
-            assert self.cost_model is not None
-            res = self.store.put(
-                key,
+            key, dt = admit_and_store(
+                self.store,
+                self.policy,
+                self.cost_model,
+                self.admission,
+                prefix,
                 stage_values[depth],
-                compute_seconds=self.cost_model.recompute_seconds(
-                    prefix, sum(module_seconds[:depth]) or None
-                ),
+                sum(module_seconds[:depth]) or None,
             )
-            store_s += res.seconds
-            if res.admitted:
+            store_s += dt
+            if key is not None:
                 stored_keys.append(key)
-            else:  # artifact exceeds the whole store budget: never stored
-                self.policy.stored.pop(key, None)
 
         total = time.perf_counter() - t_start
         result = RunResult(

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import threading
 import time
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
@@ -30,16 +31,18 @@ class ProvenanceLog:
     def __init__(self, path: str | Path | None = None) -> None:
         self.path = Path(path) if path else None
         self.records: list[RunRecord] = []
+        self._lock = threading.Lock()  # concurrent runs append from workers
         if self.path and self.path.exists():
             for line in self.path.read_text().splitlines():
                 if line.strip():
                     self.records.append(RunRecord(**json.loads(line)))
 
     def append(self, rec: RunRecord) -> None:
-        self.records.append(rec)
-        if self.path:
-            with self.path.open("a") as f:
-                f.write(json.dumps(asdict(rec)) + "\n")
+        with self._lock:
+            self.records.append(rec)
+            if self.path:
+                with self.path.open("a") as f:
+                    f.write(json.dumps(asdict(rec)) + "\n")
 
     def __iter__(self) -> Iterator[RunRecord]:
         return iter(self.records)

@@ -18,6 +18,7 @@ module's tool-state digest so differently-parameterized runs never match.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 from .rules import RuleMiner
@@ -52,9 +53,18 @@ class StoragePolicy:
         self.n_reusable_pipelines = 0
         self.total_reuse_events = 0
         self.total_intermediate_states = 0
+        # serializes the replay protocol (miner + counters + stored map) when
+        # many scheduler runs step the same policy concurrently.  Lock order:
+        # never call store methods while holding this lock (the store's evict
+        # listeners mutate ``stored`` with plain GIL-atomic dict ops instead).
+        self.lock = threading.RLock()
 
     # -- main entry point --------------------------------------------------
     def step(self, wf: Workflow) -> Recommendation:
+        with self.lock:
+            return self._step_locked(wf)
+
+    def _step_locked(self, wf: Workflow) -> Recommendation:
         self.n_pipelines += 1
         self.total_intermediate_states += wf.n_intermediate_states
 
@@ -73,6 +83,27 @@ class StoragePolicy:
                 self.stored[key] = StoredRecord(prefix, self.n_pipelines)
                 admitted.append(prefix)
         return Recommendation(reuse=reuse, store=admitted)
+
+    def step_paths(self, workflows: "list[Workflow]") -> Recommendation:
+        """Step every root-to-sink path of one DAG atomically (Ch. 3.3
+        decomposition: a DAG contributes one mined pipeline per path) and
+        merge the recommendations: deepest reuse wins, stores are unioned."""
+        with self.lock:
+            reuse: PrefixKey | None = None
+            store: list[PrefixKey] = []
+            seen: set[str] = set()
+            for wf in workflows:
+                rec = self._step_locked(wf)
+                if rec.reuse is not None and (
+                    reuse is None or rec.reuse.depth > reuse.depth
+                ):
+                    reuse = rec.reuse
+                for prefix in rec.store:
+                    key = prefix.key(self.with_state)
+                    if key not in seen:
+                        seen.add(key)
+                        store.append(prefix)
+            return Recommendation(reuse=reuse, store=store)
 
     def lookup_reuse(self, wf: Workflow) -> PrefixKey | None:
         """Longest stored prefix of ``wf`` (the deepest skip point)."""

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import json
 import pickle
+import threading
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -103,6 +104,11 @@ class IntermediateStore:
         self.records: dict[str, ArtifactRecord] = {}
         self._evict_listeners: list[Callable[[str], None]] = []
         self._gets_since_flush = 0
+        # one reentrant lock serializes index/manifest mutation so concurrent
+        # scheduler workers can't corrupt ``records`` or interleave partial
+        # writes of ``index.json`` (evict listeners run while it is held —
+        # they must not call back into the store or take the policy lock)
+        self._lock = threading.RLock()
         self._load_index()
 
     _GET_FLUSH_EVERY = 16  # persist hit stats at most every N get() calls
@@ -125,7 +131,8 @@ class IntermediateStore:
 
     # -- helpers -------------------------------------------------------------
     def has(self, key: str) -> bool:
-        return key in self.records and self.backend.exists(key)
+        with self._lock:
+            return key in self.records and self.backend.exists(key)
 
     def _blob_name(self, stem: str) -> str:
         return f"{stem}.npy{self.codec.suffix}"
@@ -156,8 +163,9 @@ class IntermediateStore:
 
     def evict(self, key: str) -> None:
         """Drop an artifact and notify listeners (policy bookkeeping)."""
-        self._evict_batch([key])
-        self._flush_index()
+        with self._lock:
+            self._evict_batch([key])
+            self._flush_index()
 
     def _evict_batch(self, keys: list[str]) -> None:
         """Drop artifacts + notify listeners without flushing per victim;
@@ -189,6 +197,12 @@ class IntermediateStore:
         value (the executor passes the prefix's module seconds) — the *gain*
         numerator of the eviction criterion.
         """
+        with self._lock:
+            return self._put_locked(key, value, compute_seconds)
+
+    def _put_locked(
+        self, key: str, value: Any, compute_seconds: float | None
+    ) -> PutResult:
         if self.has(key):
             rec = self.records[key]
             if compute_seconds is not None:
@@ -266,6 +280,10 @@ class IntermediateStore:
         )
 
     def get(self, key: str, sharding: jax.sharding.Sharding | None = None) -> Any:
+        with self._lock:
+            return self._get_locked(key, sharding)
+
+    def _get_locked(self, key: str, sharding: jax.sharding.Sharding | None) -> Any:
         if not self.has(key):
             raise KeyError(key)
         t0 = time.perf_counter()
@@ -307,23 +325,29 @@ class IntermediateStore:
         return value
 
     def delete(self, key: str) -> None:
-        if key in self.records:
-            self.backend.delete(key)
-            del self.records[key]
-            self._flush_index()
+        with self._lock:
+            if key in self.records:
+                self.backend.delete(key)
+                del self.records[key]
+                self._flush_index()
 
     # -- accounting ----------------------------------------------------------
     @property
     def total_disk_bytes(self) -> int:
-        return sum(r.nbytes_disk for r in self.records.values())
+        with self._lock:
+            return sum(r.nbytes_disk for r in self.records.values())
 
     @property
     def total_raw_bytes(self) -> int:
-        return sum(r.nbytes_raw for r in self.records.values())
+        with self._lock:
+            return sum(r.nbytes_raw for r in self.records.values())
 
     def save_throughput(self) -> float:
         """Mean observed store bandwidth (raw bytes/s) for T1 estimation."""
-        pairs = [(r.nbytes_raw, r.save_s) for r in self.records.values() if r.save_s > 0]
+        with self._lock:
+            pairs = [
+                (r.nbytes_raw, r.save_s) for r in self.records.values() if r.save_s > 0
+            ]
         if not pairs:
             return 1e9
         tot_b = sum(b for b, _ in pairs)
@@ -331,11 +355,12 @@ class IntermediateStore:
         return tot_b / max(tot_s, 1e-9)
 
     def load_throughput(self) -> float:
-        pairs = [
-            (r.nbytes_raw, r.load_s)
-            for r in self.records.values()
-            if r.load_s and r.load_s > 0
-        ]
+        with self._lock:
+            pairs = [
+                (r.nbytes_raw, r.load_s)
+                for r in self.records.values()
+                if r.load_s and r.load_s > 0
+            ]
         if not pairs:
             return self.save_throughput() * 2.0
         tot_b = sum(b for b, _ in pairs)

@@ -14,13 +14,62 @@ from __future__ import annotations
 
 import hashlib
 import json
+import re
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator, Mapping, Sequence
 
+_ADDR_RE = re.compile(r" at 0x[0-9a-fA-F]+")
+
+
+def _canonical(obj: Any) -> Any:
+    """Reduce ``obj`` to a JSON-safe form whose rendering is identical across
+    processes.  ``repr`` fallbacks that embed memory addresses would make the
+    digest unique per run — silently defeating cross-process reuse — so
+    address-bearing reprs are rejected rather than hashed."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, bytes):
+        return {"__bytes__": hashlib.sha256(obj).hexdigest()}
+    if isinstance(obj, Mapping):
+        # encoded as a tagged sorted pair-list, not a plain JSON object, so a
+        # user dict like {"__set__": [...]} can never forge the sentinel
+        # encodings below (which would collide with the real set/array/bytes)
+        return {
+            "__map__": [
+                [str(k), _canonical(v)]
+                for k, v in sorted(obj.items(), key=lambda kv: str(kv[0]))
+            ]
+        }
+    if isinstance(obj, (list, tuple)):
+        return [_canonical(x) for x in obj]
+    if isinstance(obj, (set, frozenset)):
+        return {"__set__": sorted(json.dumps(_canonical(x), sort_keys=True) for x in obj)}
+    # array-likes (numpy / jax / ml_dtypes): digest dtype + shape + raw bytes
+    if hasattr(obj, "dtype") and hasattr(obj, "shape") and hasattr(obj, "tobytes"):
+        import numpy as np
+
+        arr = np.ascontiguousarray(obj)
+        return {
+            "__array__": str(arr.dtype),
+            "shape": list(arr.shape),
+            "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+        }
+    r = repr(obj)
+    if _ADDR_RE.search(r):
+        raise TypeError(
+            f"cannot stably hash {type(obj).__name__!r}: repr embeds a memory "
+            "address; give it a value-based __repr__ or pass primitives/arrays"
+        )
+    return {"__repr__": r}
+
 
 def _stable_hash(obj: Any) -> str:
-    """SHA-256 of a canonical-JSON rendering; used for tool states & datasets."""
-    payload = json.dumps(obj, sort_keys=True, default=repr).encode()
+    """SHA-256 of a canonical-JSON rendering; used for tool states & datasets.
+
+    Deterministic across processes: unhashable leaves are canonicalized (arrays
+    by content digest) or rejected, never ``repr``-ed into ``<... at 0x...>``.
+    """
+    payload = json.dumps(_canonical(obj), sort_keys=True).encode()
     return hashlib.sha256(payload).hexdigest()[:16]
 
 

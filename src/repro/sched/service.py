@@ -1,0 +1,175 @@
+"""Concurrent workflow submission front door.
+
+``WorkflowService`` accepts many overlapping DAG (or sequential) workflow
+submissions and executes them against ONE shared ``IntermediateStore`` +
+``StoragePolicy`` + module registry — the configuration where the thesis'
+storing strategy pays off at scale: concurrent runs share stored prefixes,
+and in-flight runs coalesce duplicate computes through single-flight.
+
+Each submission gets a lightweight coordinator running the scheduler's
+dispatch loop (coordinators mostly block on node futures) on a bounded
+coordinator pool — at most ``max_concurrent_runs`` dispatch loops exist at
+once, excess submissions simply queue; node work itself executes on the
+scheduler's bounded worker pool, so total module concurrency is capped at
+``max_workers`` regardless of how many runs are in flight.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
+from typing import Any, Mapping, Sequence
+
+from ..core.cost import CostModel
+from ..core.provenance import ProvenanceLog
+from ..core.risp import StoragePolicy
+from ..core.store import IntermediateStore
+from ..core.workflow import ModuleSpec, Workflow
+from .dag import DagWorkflow
+from .scheduler import DagRunResult, DagScheduler
+from .stats import AggregateStats
+
+
+class WorkflowService:
+    """Shared-store, shared-policy execution service for concurrent workflows."""
+
+    def __init__(
+        self,
+        store: IntermediateStore,
+        policy: StoragePolicy,
+        registry: dict[str, ModuleSpec] | None = None,
+        max_workers: int = 4,
+        admission: str = "always",
+        provenance: ProvenanceLog | None = None,
+        cost_model: CostModel | None = None,
+        max_concurrent_runs: int = 32,
+    ) -> None:
+        self.scheduler = DagScheduler(
+            store=store,
+            policy=policy,
+            registry=registry if registry is not None else {},
+            max_workers=max_workers,
+            admission=admission,
+            provenance=provenance,
+            cost_model=cost_model,
+        )
+        self._lock = threading.Lock()
+        self._t_first: float | None = None
+        self._t_last: float = 0.0
+        self._runs = 0
+        self._failures = 0
+        self._busy_s = 0.0
+        self._units_total = 0
+        self._units_skipped = 0
+        self._stored = 0
+        # a submission burst must not spawn a thread per run: coordinators
+        # run on a bounded pool, excess dispatch loops queue
+        self._coord_pool = ThreadPoolExecutor(
+            max_workers=max_concurrent_runs, thread_name_prefix="dag-run"
+        )
+        self._inflight: list[Future] = []  # coordinator-pool futures
+
+    # -- delegated surface ---------------------------------------------------
+    @property
+    def store(self) -> IntermediateStore:
+        return self.scheduler.store
+
+    @property
+    def policy(self) -> StoragePolicy:
+        return self.scheduler.policy
+
+    def register(self, spec: ModuleSpec) -> None:
+        self.scheduler.register(spec)
+
+    def register_fn(self, module_id: str, fn, **default_params) -> None:
+        self.scheduler.register_fn(module_id, fn, **default_params)
+
+    def dag(self, dataset_id: str, workflow_id: str = "") -> DagWorkflow:
+        return self.scheduler.dag(dataset_id, workflow_id)
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, dag: DagWorkflow | Workflow, data: Any) -> "Future[DagRunResult]":
+        """Non-blocking: schedule one workflow run, return its future."""
+        fut: Future[DagRunResult] = Future()
+        with self._lock:
+            if self._t_first is None:
+                self._t_first = time.perf_counter()
+
+        def _coordinate() -> None:
+            try:
+                result = self.scheduler.run(dag, data)
+            except BaseException as e:  # noqa: BLE001 - delivered via future
+                with self._lock:
+                    self._failures += 1
+                    self._t_last = time.perf_counter()
+                fut.set_exception(e)
+            else:
+                with self._lock:
+                    self._runs += 1
+                    self._busy_s += result.total_seconds
+                    self._units_total += len(result.module_seconds)
+                    self._units_skipped += result.n_skipped
+                    self._stored += len(result.stored_keys)
+                    self._t_last = time.perf_counter()
+                fut.set_result(result)
+
+        coord = self._coord_pool.submit(_coordinate)
+        with self._lock:
+            self._inflight = [f for f in self._inflight if not f.done()]
+            self._inflight.append(coord)
+        return fut
+
+    def run(self, dag: DagWorkflow | Workflow, data: Any) -> DagRunResult:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(dag, data).result()
+
+    def run_steps(
+        self,
+        dataset_id: str,
+        data: Any,
+        steps: Sequence[str | tuple[str, Mapping[str, Any] | None]],
+        workflow_id: str = "",
+    ) -> DagRunResult:
+        """Sequential-pipeline compatibility entry (same shape as
+        ``WorkflowExecutor.run``), executed as a chain DAG."""
+        dag = self.dag(dataset_id, workflow_id)
+        dag.chain(steps)
+        return self.run(dag, data)
+
+    # -- reporting / lifecycle ----------------------------------------------
+    def stats(self) -> AggregateStats:
+        sf = self.scheduler.singleflight
+        with self._lock:
+            wall = (
+                (self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last
+                else 0.0
+            )
+            return AggregateStats(
+                runs=self._runs,
+                failures=self._failures,
+                wall_seconds=max(wall, 0.0),
+                busy_seconds=self._busy_s,
+                units_total=self._units_total,
+                units_skipped=self._units_skipped,
+                stored=self._stored,
+                singleflight_waits=sf.waits,
+            )
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Wait for every in-flight submission to finish."""
+        with self._lock:
+            pending = list(self._inflight)
+        futures_wait(pending, timeout=timeout)
+
+    def close(self) -> None:
+        self.drain()
+        self._coord_pool.shutdown(wait=True)
+        self.scheduler.close()
+
+    def __enter__(self) -> "WorkflowService":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

@@ -1,0 +1,48 @@
+"""Aggregate throughput/reuse stats shared by the scheduler service and the
+serving engine (both are front doors that replay many units of work against
+one RISP-governed cache)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class AggregateStats:
+    """Fleet-level view over many completed runs/requests.
+
+    ``units`` are the per-run work items — DAG nodes for ``WorkflowService``,
+    prompt chunks for ``ServeEngine`` — so ``reuse_rate`` is comparable
+    across both: the fraction of work the shared intermediate-data layer
+    avoided recomputing.
+    """
+
+    runs: int = 0
+    failures: int = 0
+    wall_seconds: float = 0.0  # first submission -> last completion
+    busy_seconds: float = 0.0  # sum of per-run wall times
+    units_total: int = 0
+    units_skipped: int = 0
+    stored: int = 0
+    singleflight_waits: int = 0
+
+    @property
+    def throughput_rps(self) -> float:
+        """Completed runs per wall-clock second across the whole window."""
+        return self.runs / self.wall_seconds if self.wall_seconds > 0 else 0.0
+
+    @property
+    def reuse_rate(self) -> float:
+        """Fraction of work units skipped via store hits / single-flight."""
+        return self.units_skipped / self.units_total if self.units_total else 0.0
+
+    @property
+    def concurrency(self) -> float:
+        """Mean number of runs in flight (busy over wall time)."""
+        return self.busy_seconds / self.wall_seconds if self.wall_seconds > 0 else 0.0
+
+    def row(self) -> str:
+        return (
+            f"runs={self.runs} failures={self.failures} "
+            f"throughput={self.throughput_rps:.2f}/s reuse={self.reuse_rate:.2%} "
+            f"singleflight_waits={self.singleflight_waits} stored={self.stored}"
+        )

@@ -1,3 +1,5 @@
+from ..sched.service import WorkflowService
+from ..sched.stats import AggregateStats
 from .engine import GenStats, ServeEngine
 
-__all__ = ["GenStats", "ServeEngine"]
+__all__ = ["AggregateStats", "GenStats", "ServeEngine", "WorkflowService"]

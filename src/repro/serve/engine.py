@@ -27,6 +27,7 @@ from ..core.risp import RISP, StoragePolicy
 from ..core.store import ArtifactRecord
 from ..core.workflow import ModuleRef, Workflow
 from ..models import transformer
+from ..sched.stats import AggregateStats
 
 
 def _chunk_id(tokens: np.ndarray) -> str:
@@ -61,6 +62,11 @@ class ServeEngine:
         self._snap_records: dict[str, ArtifactRecord] = {}
         self._evictor = EvictionManager(self.snapshot_budget_bytes, self.eviction)
         self._chunk_prefill_s = 0.0  # EMA seconds to prefill one chunk
+        # O(1) running aggregates (a serving process outlives any per-request
+        # history it could afford to keep)
+        self._agg = AggregateStats()
+        self._t_first: float | None = None
+        self._t_last = 0.0
         self._prefill = jax.jit(
             lambda p, t, c, l: transformer.prefill_chunk(p, self.cfg, t, c, l)
         )
@@ -176,7 +182,7 @@ class ServeEngine:
             logits, cache, cache_len = self._decode(self.params, tok, cache, cache_len)
         decode_s = time.perf_counter() - t1
 
-        return out, GenStats(
+        stats = GenStats(
             prompt_len=len(prompt),
             n_chunks=len(chunks),
             chunks_skipped=start,
@@ -185,6 +191,15 @@ class ServeEngine:
             stored_prefixes=stored,
             n_new_tokens=len(out),
         )
+        if self._t_first is None:
+            self._t_first = t0
+        self._t_last = time.perf_counter()
+        self._agg.runs += 1
+        self._agg.busy_seconds += stats.prefill_s + stats.decode_s
+        self._agg.units_total += stats.n_chunks
+        self._agg.units_skipped += stats.chunks_skipped
+        self._agg.stored += stats.stored_prefixes
+        return out, stats
 
     def _trim_last_chunk(self, cache, cache_len):
         """Full-prefix hit: zero out the last chunk's slots and re-prefill it
@@ -217,3 +232,20 @@ class ServeEngine:
             for leaf in jax.tree_util.tree_leaves(host):
                 total += leaf.nbytes
         return total
+
+    def aggregate_stats(self) -> AggregateStats:
+        """Fleet-level view in the scheduler service's shape: one request =
+        one run, one prompt chunk = one work unit (skipped = prefill reuse)."""
+        wall = (
+            (self._t_last - self._t_first)
+            if self._t_first is not None and self._t_last
+            else 0.0
+        )
+        return AggregateStats(
+            runs=self._agg.runs,
+            wall_seconds=max(wall, 0.0),
+            busy_seconds=self._agg.busy_seconds,
+            units_total=self._agg.units_total,
+            units_skipped=self._agg.units_skipped,
+            stored=self._agg.stored,
+        )

@@ -1,0 +1,363 @@
+"""DAG model, scheduler, single-flight, and WorkflowService concurrency."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    IntermediateStore,
+    ProvenanceLog,
+    RISP,
+    TSAR,
+    WorkflowExecutor,
+)
+from repro.sched import (
+    DagScheduler,
+    DagWorkflow,
+    DagWorkflowError,
+    SingleFlight,
+    WorkflowService,
+)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return IntermediateStore(tmp_path / "store")
+
+
+def make_service(store, policy=None, max_workers=4, **kw):
+    svc = WorkflowService(
+        store=store, policy=policy or TSAR(with_state=True), max_workers=max_workers, **kw
+    )
+    calls = {"double": 0, "inc": 0, "merge": 0, "fail": 0}
+    lock = threading.Lock()
+
+    def count(name, fn):
+        def wrapped(x, **params):
+            with lock:
+                calls[name] += 1
+            return fn(x, **params)
+
+        return wrapped
+
+    svc.register_fn("double", count("double", lambda x: x * 2))
+    svc.register_fn("inc", count("inc", lambda x, by=1: x + by), by=1)
+    svc.register_fn("merge", count("merge", lambda xs: sum(xs[1:], xs[0])))
+
+    def failing(x):
+        with lock:
+            calls["fail"] += 1
+        raise RuntimeError("boom")
+
+    svc.register_fn("fail", failing)
+    return svc, calls
+
+
+# -- DAG model ----------------------------------------------------------------
+def test_dag_validation_errors():
+    dag = DagWorkflow("ds")
+    with pytest.raises(ValueError):
+        dag.validate()  # empty
+    dag.add("a", "double")
+    with pytest.raises(ValueError):
+        dag.add("a", "double")  # duplicate id
+    with pytest.raises(ValueError):
+        dag.add("b", "inc", after="nope")  # unknown parent
+
+
+def test_dag_topo_order_and_structure():
+    dag = DagWorkflow("ds")
+    dag.add("a", "m1")
+    dag.add("b", "m2", after="a")
+    dag.add("c", "m3", after="a")
+    dag.add("d", "m4", after=("b", "c"))
+    assert dag.topo_order() == ("a", "b", "c", "d")
+    assert dag.roots() == ("a",)
+    assert dag.sinks() == ("d",)
+    assert dag.children_of("a") == ("b", "c")
+
+
+def test_dag_chain_prefix_linear_ancestry_only():
+    dag = DagWorkflow("ds")
+    dag.add("a", "m1")
+    dag.add("b", "m2", after="a")
+    dag.add("c", "m3", after="a")
+    dag.add("d", "m4", after=("b", "c"))
+    dag.add("e", "m5", after="d")
+    assert dag.chain_prefix("b").key() == "ds::m1>m2"
+    assert dag.chain_prefix("c").key() == "ds::m1>m3"
+    assert dag.chain_prefix("d") is None  # fan-in
+    assert dag.chain_prefix("e") is None  # fan-in ancestor
+
+
+def test_dag_path_decomposition():
+    dag = DagWorkflow("ds", "w")
+    dag.add("a", "m1")
+    dag.add("b", "m2", after="a")
+    dag.add("c", "m3", after="a")
+    dag.add("d", "m4", after=("b", "c"))
+    paths = dag.paths()
+    keys = sorted(wf.prefix(len(wf)).key() for wf in paths)
+    assert keys == ["ds::m1>m2>m4", "ds::m1>m3>m4"]
+
+
+def test_dag_from_workflow_roundtrip(store):
+    ex = WorkflowExecutor(store=store, policy=TSAR(with_state=True))
+    ex.register_fn("double", lambda x: x * 2)
+    ex.register_fn("inc", lambda x, by=1: x + by, by=1)
+    wf = ex.make_workflow("ds", ["double", ("inc", {"by": 3})], "w")
+    dag = DagWorkflow.from_workflow(wf)
+    last = dag.topo_order()[-1]
+    # lifted chain produces the exact sequential prefix identities
+    assert dag.chain_prefix(last).key(True) == wf.prefix(2).key(True)
+
+
+# -- single-flight ------------------------------------------------------------
+def test_singleflight_one_leader():
+    sf = SingleFlight()
+    calls = []
+    barrier = threading.Barrier(8)
+    results = []
+
+    def compute():
+        calls.append(1)
+        time.sleep(0.1)
+        return 42
+
+    def racer():
+        barrier.wait()
+        results.append(sf.run("k", compute))
+
+    threads = [threading.Thread(target=racer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(calls) == 1
+    assert all(v == 42 for v, _ in results)
+    assert sum(1 for _, leader in results if leader) == 1
+    assert sf.leads == 1 and sf.waits == 7 and sf.in_flight == 0
+
+
+def test_singleflight_leader_failure_propagates():
+    sf = SingleFlight()
+    started = threading.Event()
+    errors = []
+
+    def compute():
+        started.set()
+        time.sleep(0.05)
+        raise ValueError("boom")
+
+    def leader():
+        with pytest.raises(ValueError):
+            sf.run("k", compute)
+
+    def follower():
+        started.wait()
+        try:
+            sf.run("k", lambda: 1)
+        except ValueError as e:
+            errors.append(e)
+
+    t1 = threading.Thread(target=leader)
+    t2 = threading.Thread(target=follower)
+    t1.start()
+    t2.start()
+    t1.join()
+    t2.join()
+    # follower either coalesced onto the failing flight (sees the error) or
+    # arrived after it resolved (computed 1 itself) — never hangs
+    assert sf.in_flight == 0
+
+
+# -- scheduler ----------------------------------------------------------------
+def test_dag_matches_sequential_executor(store, tmp_path):
+    """A chain DAG must produce the sequential executor's exact output and
+    share its stored artifact identities (cross-front-door reuse)."""
+    ex = WorkflowExecutor(store=store, policy=TSAR(with_state=True))
+    ex.register_fn("double", lambda x: x * 2)
+    ex.register_fn("inc", lambda x, by=1: x + by, by=1)
+    data = jnp.linspace(-2, 2, 16)
+    seq = ex.run("ds", data, ["double", ("inc", {"by": 3})], "w1")
+
+    svc, calls = make_service(IntermediateStore(tmp_path / "s2"))
+    r = svc.run_steps("ds", data, ["double", ("inc", {"by": 3})], "w2")
+    np.testing.assert_array_equal(np.asarray(seq.output), np.asarray(r.output))
+    svc.close()
+
+    # same registry defaults => same prefix keys: a DAG run against the
+    # sequential executor's store reuses its artifacts
+    svc2, calls2 = make_service(store, policy=ex.policy)
+    r2 = svc2.run_steps("ds", data, ["double", ("inc", {"by": 3})], "w3")
+    assert calls2["double"] == 0 and calls2["inc"] == 0  # fully reused
+    assert r2.n_skipped == 2
+    np.testing.assert_array_equal(np.asarray(seq.output), np.asarray(r2.output))
+    svc2.close()
+
+
+def test_dag_fan_out_fan_in_correctness(store):
+    svc, calls = make_service(store)
+    dag = svc.dag("ds", "w1")
+    dag.add("a", "double")
+    dag.add("b", "inc", {"by": 3}, after="a")
+    dag.add("c", "inc", {"by": 5}, after="a")
+    dag.add("m", "merge", after=("b", "c"))
+    data = jnp.arange(4.0)
+    r = svc.run(dag, data)
+    expect = (np.arange(4.0) * 2 + 3) + (np.arange(4.0) * 2 + 5)
+    np.testing.assert_allclose(np.asarray(r.output), expect)
+    assert calls["double"] == 1  # shared prefix computed once within the run
+    assert r.node_results["m"].key is None  # fan-in: not store-addressable
+    svc.close()
+
+
+def test_dag_prefix_reuse_and_pruning(store):
+    svc, calls = make_service(store)
+    data = jnp.arange(6.0)
+    svc.run_steps("ds", data, ["double", ("inc", {"by": 1}), "double"], "w1")
+    assert calls["double"] == 2
+    # second run extends a stored prefix: ancestors are pruned, not re-run
+    r2 = svc.run_steps("ds", data, ["double", ("inc", {"by": 1}), ("inc", {"by": 9})], "w2")
+    assert calls["double"] == 2 and calls["inc"] == 2
+    assert r2.n_skipped == 2
+    assert r2.reused_prefix is not None and r2.reused_prefix.depth == 2
+    sources = {n: res.source for n, res in r2.node_results.items()}
+    assert sorted(sources.values()) == ["computed", "loaded", "pruned"]
+    np.testing.assert_allclose(np.asarray(r2.output), np.arange(6.0) * 2 + 1 + 9)
+    svc.close()
+
+
+def test_dag_module_failure_raises_and_recovers(store):
+    svc, calls = make_service(store)
+    data = jnp.arange(4.0)
+    dag = svc.dag("ds", "w1")
+    dag.add("a", "double")
+    dag.add("b", "inc", after="a")
+    dag.add("f", "fail", after="b")
+    with pytest.raises(DagWorkflowError) as ei:
+        svc.run(dag, data)
+    assert ei.value.node_id == "f"
+    # recovery point persisted: retry with a fixed tail skips the good prefix
+    r = svc.run_steps("ds", data, ["double", "inc", "double"], "w2")
+    assert calls["double"] == 2 and calls["inc"] == 1
+    np.testing.assert_allclose(np.asarray(r.output), (np.arange(4.0) * 2 + 1) * 2)
+    svc.close()
+
+
+def test_dag_provenance_records(store, tmp_path):
+    log = ProvenanceLog(tmp_path / "prov.jsonl")
+    svc, _ = make_service(store, provenance=log)
+    svc.run_steps("ds", jnp.arange(4.0), ["double", "inc"], "w1")
+    svc.close()
+    assert len(log) == 1
+    rec = log.records[0]
+    assert rec.extra.get("scheduler") == "dag"
+    assert len(rec.modules) == 2 and len(rec.module_seconds) == 2
+
+
+def test_scheduler_worker_counts_equivalent(tmp_path):
+    """Same DAG, same results at 1 and 4 workers (determinism)."""
+    outs = []
+    for workers in (1, 4):
+        svc, _ = make_service(
+            IntermediateStore(tmp_path / f"s{workers}"), max_workers=workers
+        )
+        dag = svc.dag("ds", "w")
+        dag.add("a", "double")
+        for i in range(6):
+            dag.add(f"b{i}", "inc", {"by": i}, after="a")
+        r = svc.run(dag, jnp.arange(8.0))
+        outs.append({k: np.asarray(v) for k, v in r.outputs.items()})
+        svc.close()
+    assert outs[0].keys() == outs[1].keys()
+    for k in outs[0]:
+        np.testing.assert_array_equal(outs[0][k], outs[1][k])
+
+
+def test_dag_recomputes_when_planned_load_vanishes(store):
+    """A prefix evicted between planning and execution: the worker falls back
+    to recomputing the chain inline (recursing through pruned ancestors)."""
+    svc, calls = make_service(store)
+    data = jnp.arange(4.0)
+    svc.run_steps("ds", data, ["double", "inc"], "w1")
+    assert calls["double"] == 1 and calls["inc"] == 1
+
+    # the deepest artifact vanishes at get() time, though planning saw it live
+    deep_key = [k for k in store.records if ">" in k][0]
+    real_get = store.get
+    vanished = {"done": False}
+
+    def vanishing_get(key, sharding=None):
+        if key == deep_key and not vanished["done"]:
+            vanished["done"] = True
+            raise KeyError(key)  # simulates eviction between has() and get()
+        return real_get(key, sharding)
+
+    store.get = vanishing_get
+    try:
+        r = svc.run_steps("ds", data, ["double", "inc", ("inc", {"by": 9})], "w2")
+    finally:
+        store.get = real_get
+    assert vanished["done"], "test did not exercise the fallback path"
+    np.testing.assert_allclose(np.asarray(r.output), np.arange(4.0) * 2 + 1 + 9)
+    # the chain was recomputed from the depth-1 artifact: double not re-run
+    assert calls["double"] == 1 and calls["inc"] == 3
+    svc.close()
+
+
+# -- WorkflowService concurrency stress (ISSUE satellite) ---------------------
+def test_service_singleflight_stress(tmp_path):
+    """≥16 overlapping DAGs sharing one expensive prefix: the prefix is
+    computed exactly once, every run succeeds, and the store respects its
+    byte budget throughout."""
+    capacity = 1 << 20
+    store = IntermediateStore(tmp_path / "store", capacity_bytes=capacity)
+    svc = WorkflowService(
+        store=store, policy=TSAR(with_state=True), max_workers=4
+    )
+    n_shared = [0]
+    lock = threading.Lock()
+    release = threading.Event()
+
+    def shared_stem(x):
+        with lock:
+            n_shared[0] += 1
+        release.wait(timeout=5.0)  # hold the flight open until all submitted
+        return x * 2
+
+    svc.register_fn("stem", shared_stem)
+    svc.register_fn("tail", lambda x, by=0: x + by, by=0)
+
+    futs = []
+    for i in range(16):
+        dag = svc.dag("ds", f"w{i}")
+        dag.add("a", "stem")
+        dag.add("b", "tail", {"by": i}, after="a")
+        futs.append(svc.submit(dag, jnp.arange(32.0)))
+    release.set()
+    results = [f.result(timeout=60) for f in futs]
+
+    assert n_shared[0] == 1, "single-flight must compute the shared prefix once"
+    for i, r in enumerate(results):
+        np.testing.assert_allclose(np.asarray(r.output), np.arange(32.0) * 2 + i)
+    stats = svc.stats()
+    assert stats.runs == 16 and stats.failures == 0
+    assert stats.singleflight_waits >= 1
+    assert store.total_disk_bytes <= capacity
+    svc.close()
+
+
+def test_service_stats_shape(store):
+    svc, _ = make_service(store)
+    svc.run_steps("ds", jnp.arange(4.0), ["double"], "w1")
+    svc.run_steps("ds", jnp.arange(4.0), ["double"], "w2")
+    st = svc.stats()
+    assert st.runs == 2 and st.units_total == 2
+    assert 0.0 <= st.reuse_rate <= 1.0
+    assert st.throughput_rps > 0
+    assert "runs=2" in st.row()
+    svc.close()

@@ -1,0 +1,71 @@
+"""Regression tests for ``_stable_hash`` determinism (ISSUE 2 satellite).
+
+The old implementation fell back to ``repr`` for non-JSON leaves, which (a)
+leaked memory addresses (``<object at 0x...>``) into digests — unique per
+process, silently defeating cross-process reuse — and (b) collided on large
+arrays whose reprs are elided (``[0 1 2 ... 999]``)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.workflow import ToolState, _stable_hash
+
+
+def test_same_array_hashes_equal_in_fresh_encoders():
+    # two independently-constructed equal arrays must hash identically
+    # (the old repr fallback was value-based only by accident of smallness)
+    a = np.arange(8, dtype=np.float32)
+    b = np.arange(8, dtype=np.float32)
+    assert a is not b
+    assert _stable_hash(a) == _stable_hash(b)
+    assert _stable_hash({"x": a}) == _stable_hash({"x": b})
+
+
+def test_large_arrays_do_not_collide():
+    # np.repr elides the middle of large arrays; the old encoder hashed the
+    # elided repr, colliding on arrays that differ only in the middle
+    a = np.zeros(100_000, dtype=np.float32)
+    b = a.copy()
+    b[50_000] = 1.0
+    assert repr(a) == repr(b)  # the collision the old encoder inherited
+    assert _stable_hash(a) != _stable_hash(b)
+
+
+def test_dtype_and_shape_distinguish():
+    a = np.zeros(16, dtype=np.float32)
+    assert _stable_hash(a) != _stable_hash(a.astype(np.float64))
+    assert _stable_hash(a) != _stable_hash(a.reshape(4, 4))
+
+
+def test_jax_arrays_hash_like_numpy():
+    a = jnp.arange(8.0)
+    assert _stable_hash(a) == _stable_hash(np.arange(8, dtype=np.float32))
+
+
+def test_address_bearing_repr_rejected():
+    class Opaque:
+        pass
+
+    with pytest.raises(TypeError, match="memory address"):
+        _stable_hash(Opaque())
+    with pytest.raises(TypeError):
+        _stable_hash({"nested": [1, 2, object()]})
+
+
+def test_containers_canonicalize():
+    assert _stable_hash({"a": 1, "b": 2}) == _stable_hash({"b": 2, "a": 1})
+    assert _stable_hash({1, 2, 3}) == _stable_hash({3, 2, 1})
+    assert _stable_hash((1, 2)) == _stable_hash([1, 2])
+    assert _stable_hash(b"abc") == _stable_hash(b"abc")
+    assert _stable_hash(b"abc") != _stable_hash(b"abd")
+
+
+def test_tool_state_digests_unchanged_for_plain_params():
+    # ToolState params are (str, str) tuples — already JSON-safe; the digest
+    # must stay byte-compatible with pre-fix stores (pinned value)
+    state = ToolState.from_config({"by": 3, "mode": "fast"})
+    assert state.digest == _stable_hash(state.params)
+    assert ToolState.from_config(None).digest == "default"
+    # deterministic across fresh objects
+    assert state.digest == ToolState.from_config({"mode": "fast", "by": 3}).digest
