@@ -1,0 +1,76 @@
+"""Recommendation-surface benchmark: ``Client.recommend`` latency and
+hit-quality on the Galaxy-calibrated Ch. 4 corpus.
+
+Protocol: replay the first ``n_history`` corpus workflows into a PT (RISP)
+policy, then for each of the remaining workflows query recommendations from
+its length-k partial chain and score:
+
+  * ``next@1`` / ``next@5`` — does the workflow's actual (k+1)-th module
+    appear as the top / among the top-5 next-module suggestions?
+  * ``reuse_hit`` — fraction of queries with >=1 reusable-prefix suggestion
+    (the thesis' skip-point surface; PT stores selectively, so this tracks
+    its ~51% reusable-pipeline likeliness, not 100%).
+
+Latency is reported per ``recommend()`` call — the while-composing budget
+(the design study arXiv:2010.04880 wants suggestions interactively).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.api import Recommender
+from repro.core import RISP, galaxy_ch4_corpus
+
+
+def run(
+    n_history: int = 400,
+    partial_frac: float = 0.5,
+    top_k: int = 5,
+) -> list[str]:
+    corpus = galaxy_ch4_corpus()
+    history, queries = corpus[:n_history], corpus[n_history:]
+
+    policy = RISP()
+    for wf in history:
+        policy.step(wf)
+    rec = Recommender(policy)  # no store: suggestions from mined history
+
+    n = next1 = next5 = reuse_hits = 0
+    t_total = 0.0
+    for wf in queries:
+        k = max(1, int(len(wf) * partial_frac))
+        if k >= len(wf):
+            continue
+        t0 = time.perf_counter()
+        report = rec.recommend(wf.dataset_id, wf.modules[:k], top_k=top_k)
+        t_total += time.perf_counter() - t0
+        n += 1
+        truth = wf.modules[k].module_id
+        suggested = [s.module_id for s in report.next_modules]
+        next1 += int(bool(suggested) and suggested[0] == truth)
+        next5 += int(truth in suggested)
+        reuse_hits += int(bool(report.reusable_prefixes))
+
+    if n == 0:
+        return ["recommend,-1,no queries"]
+    us = t_total * 1e6 / n
+    lines = [
+        f"recommend_latency,{us:.1f},queries={n} history={n_history} top_k={top_k}",
+        f"recommend_next_module,{us:.1f},"
+        f"next@1={next1 / n:.2%} next@5={next5 / n:.2%}",
+        f"recommend_reuse_surface,{us:.1f},"
+        f"reuse_hit={reuse_hits / n:.2%} stored={policy.n_stored}",
+    ]
+    # warm-index sanity: repeated queries must not rebuild the rule index
+    wf = queries[0]
+    t0 = time.perf_counter()
+    reps = 200
+    for _ in range(reps):
+        rec.recommend(wf.dataset_id, wf.modules[: max(1, len(wf) // 2)], top_k=top_k)
+    warm_us = (time.perf_counter() - t0) * 1e6 / reps
+    lines.append(f"recommend_warm_index,{warm_us:.1f},reps={reps}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

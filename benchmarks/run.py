@@ -12,6 +12,7 @@ def main() -> None:
         bench_dag_scheduler,
         bench_eviction,
         bench_prefix_cache,
+        bench_recommend,
         bench_risp,
         bench_serving_load,
         bench_time_gain,
@@ -26,6 +27,7 @@ def main() -> None:
         ("prefix_cache (beyond-paper)", bench_prefix_cache.run),
         ("eviction (gain-loss vs LRU, arXiv 2202.06473)", bench_eviction.run),
         ("dag_scheduler (Ch. 6.3.1 DAGs, concurrent runs)", bench_dag_scheduler.run),
+        ("recommend (Ch. 4 recommendation surface, repro.api)", bench_recommend.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

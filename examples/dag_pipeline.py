@@ -1,5 +1,5 @@
-"""Fan-out DAG pipeline through WorkflowService: shared stem, parallel
-branches, single-flight across concurrent submissions.
+"""Fan-out DAG pipeline through the `repro.api` Client: shared stem, parallel
+branches, single-flight across concurrent submissions — one declarative spec.
 
     PYTHONPATH=src python examples/dag_pipeline.py
 """
@@ -8,68 +8,79 @@ import time
 
 import numpy as np
 
-from repro.core import IntermediateStore, RISP
-from repro.sched import WorkflowService
+from repro.api import Client, WorkflowSpec
 
 
 def main() -> None:
-    store = IntermediateStore(tempfile.mkdtemp(), capacity_bytes=64 << 20)
-    svc = WorkflowService(
-        store=store,
-        policy=RISP(with_state=True),  # adaptive RISP (thesis Ch. 5)
+    client = Client(
+        tempfile.mkdtemp(),
+        policy="PT",           # adaptive RISP (thesis Ch. 5): with_state=True
+        capacity_bytes=64 << 20,
         max_workers=4,
     )
 
+    @client.module("normalize")
     def normalize(x):
         time.sleep(0.05)  # model an external-tool invocation
         a = np.asarray(x, np.float32)
         return (a - a.mean()) / (a.std() + 1e-6)
 
+    @client.module("featurize")
     def featurize(x):
         time.sleep(0.05)
         a = np.asarray(x, np.float32)
         return np.stack([a, a**2], axis=-1)
 
+    @client.module("analyze", q=50)
     def analyze(x, q=50):
         time.sleep(0.05)
         return np.percentile(np.asarray(x), q, axis=0)
 
+    @client.module("merge")
     def merge(inputs):
         return np.stack(list(inputs))
 
-    svc.register_fn("normalize", normalize)
-    svc.register_fn("featurize", featurize)
-    svc.register_fn("analyze", analyze, q=50)
-    svc.register_fn("merge", merge)
-
-    # one DAG: stem -> 4 analysis branches -> fan-in summary
-    dag = svc.dag("survey2026", workflow_id="report")
-    dag.add("norm", "normalize")
-    dag.add("feat", "featurize", after="norm")
-    for i, q in enumerate((10, 25, 75, 90)):
-        dag.add(f"q{q}", "analyze", {"q": q}, after="feat")
-    dag.add("summary", "merge", after=tuple(f"q{q}" for q in (10, 25, 75, 90)))
+    # one spec: stem -> 4 analysis branches -> fan-in summary
+    spec = WorkflowSpec("survey2026", workflow_id="report")
+    spec.add("norm", "normalize")
+    spec.add("feat", "featurize", after="norm")
+    for q in (10, 25, 75, 90):
+        spec.add(f"q{q}", "analyze", {"q": q}, after="feat")
+    spec.add("summary", "merge", after=tuple(f"q{q}" for q in (10, 25, 75, 90)))
 
     data = np.random.default_rng(0).random(20_000)
-    r = svc.run(dag, data)
+    r = client.run(spec, data)
     print(f"run1: summary shape={np.asarray(r.output).shape} "
           f"computed={r.n_computed} skipped={r.n_skipped} "
           f"stored={len(r.stored_keys)} in {r.total_seconds:.2f}s")
 
-    # many concurrent submissions sharing the stem: the policy's stored
-    # prefix (and single-flight, while runs overlap) deduplicates the stem
+    # the spec is a shareable document — a colleague parses it and their
+    # probe runs reuse the stored stem (single-flight while runs overlap)
+    shared = spec.to_json()
+    print(f"spec digest {WorkflowSpec.from_json(shared).digest} "
+          f"({len(shared)} bytes of JSON)")
+
     futs = []
     for i in range(8):
-        d = svc.dag("survey2026", workflow_id=f"probe{i}")
-        d.add("norm", "normalize")
-        d.add("feat", "featurize", after="norm")
-        d.add("an", "analyze", {"q": 5 + 10 * i}, after="feat")
-        futs.append(svc.submit(d, data))
+        probe = WorkflowSpec("survey2026", workflow_id=f"probe{i}")
+        probe.add("norm", "normalize")
+        probe.add("feat", "featurize", after="norm")
+        probe.add("an", "analyze", {"q": 5 + 10 * i}, after="feat")
+        futs.append(client.submit(probe, data))
     for f in futs:
         f.result()
 
-    print("fleet:", svc.stats().row())
-    svc.close()
+    # what would the recommender tell someone composing a 9th probe?
+    partial = WorkflowSpec("survey2026")
+    partial.add("norm", "normalize")
+    report = client.recommend(partial)
+    if report.best_reuse:
+        print("compose hint:", report.best_reuse.describe())
+    if report.best_next:
+        print("compose hint:", report.best_next.describe())
+
+    print("fleet:", client.stats().row())
+    client.close()
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Quickstart: RISP-managed intermediate data in a JAX workflow, end to end.
+"""Quickstart: the `repro.api` Client — declarative workflows, RISP-managed
+intermediate data, and while-composing recommendations, end to end.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,29 +7,59 @@ import tempfile
 
 import jax.numpy as jnp
 
-from repro.core import IntermediateStore, ModuleSpec, RISP, WorkflowExecutor
+from repro.api import Client, WorkflowSpec
 
-# 1. an executor with a RISP storage policy
-tmp = tempfile.mkdtemp()
-ex = WorkflowExecutor(store=IntermediateStore(tmp), policy=RISP(with_state=True))
+# 1. one constructor wires store + policy + eviction + both engines
+client = Client(tempfile.mkdtemp(), policy="PT", with_state=True)
 
-# 2. register modules (any JAX-callable stages)
-ex.register(ModuleSpec("normalize", lambda x: (x - x.mean()) / (x.std() + 1e-6)))
-ex.register(ModuleSpec("featurize", lambda x: jnp.stack([x, x**2, jnp.sin(x)], -1)))
-ex.register(ModuleSpec("score", lambda f, scale=1.0: (f.sum(-1) * scale)))
+
+# 2. register modules with the @client.module decorator (any JAX-callable)
+@client.module("normalize")
+def normalize(x):
+    return (x - x.mean()) / (x.std() + 1e-6)
+
+
+@client.module("featurize")
+def featurize(x):
+    return jnp.stack([x, x**2, jnp.sin(x)], -1)
+
+
+@client.module("score", scale=1.0)
+def score(f, scale=1.0):
+    return f.sum(-1) * scale
+
 
 data = jnp.linspace(-3, 3, 10_000)
 
-# 3. run workflows; RISP mines the history and stores the reusable prefix
+# 3. workflows are declarative, serializable documents
 for i, scale in enumerate([1.0, 1.0, 2.0, 0.5]):
-    r = ex.run("sensor-A", data, ["normalize", "featurize", ("score", {"scale": scale})])
+    spec = WorkflowSpec.from_steps(
+        "sensor-A", ["normalize", "featurize", ("score", {"scale": scale})], f"w{i}"
+    )
+    r = client.run(spec, data)
     print(
         f"run {i}: skipped {r.n_skipped}/3 modules, "
         f"stored {len(r.stored_keys)} artifact(s), "
         f"exec {r.exec_seconds*1e3:.1f} ms"
     )
 
-print(f"\nstore now holds {len(ex.store.records)} artifacts "
-      f"({ex.store.total_disk_bytes/1e6:.2f} MB compressed)")
-print("RISP reusable-pipeline likeliness:",
-      f"{100*ex.policy.n_reusable_pipelines/ex.policy.n_pipelines:.0f}%")
+# 4. a spec round-trips through JSON with its identity intact: share the
+#    document and another process reuses the same stored prefixes
+text = spec.to_json(indent=2)
+clone = WorkflowSpec.from_json(text)
+assert clone.digest == spec.digest
+r = client.run(clone, data)
+print(f"\nreplayed from JSON: skipped {r.n_skipped}/3 (digest {clone.digest})")
+
+# 5. recommendations while composing: what do users run after this prefix?
+partial = WorkflowSpec.from_steps("sensor-A", ["normalize", "featurize"])
+report = client.recommend(partial)
+if report.best_reuse:
+    print("reuse suggestion:", report.best_reuse.describe())
+for s in report.next_modules:
+    print("next suggestion:", s.describe())
+
+print(f"\nstore holds {len(client.store.records)} artifacts "
+      f"({client.store.total_disk_bytes/1e6:.2f} MB compressed)")
+print("fleet stats:", client.stats().row())
+client.close()

@@ -1,0 +1,313 @@
+"""One front door for the whole system.
+
+Before ``repro.api``, running a workflow meant choosing between three
+disjoint entry points — ``WorkflowExecutor`` (sequential), ``WorkflowService``
+(concurrent DAGs), ``ServeEngine`` (serving) — each with its own module
+bookkeeping.  :class:`Client` wires store + policy + eviction + cost model +
+registry + both execution engines in one constructor, and accepts the same
+declarative :class:`~repro.api.spec.WorkflowSpec` everywhere.  Because both
+engines share one :class:`~repro.core.registry.ModuleRegistry` and one
+``StoragePolicy``, a prefix stored by a sequential ``run`` is reused by a
+concurrent ``submit`` of an equivalent spec (and vice versa) — the store
+keys are identical by construction.
+
+``recommend`` exposes the thesis' Ch. 4 recommendation pipeline over the
+same mined history: feed it a partial spec while composing and it returns
+ranked reusable-prefix and next-module suggestions.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+from ..core.cost import CostModel
+from ..core.executor import RunResult, WorkflowExecutor
+from ..core.provenance import ProvenanceLog
+from ..core.registry import ModuleRegistry
+from ..core.risp import StoragePolicy, make_policy
+from ..core.store import IntermediateStore
+from ..core.workflow import ModuleRef, ModuleSpec, Workflow
+from ..sched.dag import DagWorkflow
+from ..sched.scheduler import DagRunResult
+from ..sched.service import WorkflowService
+from ..sched.stats import AggregateStats
+from .recommend import RecommendReport, Recommender
+from .spec import WorkflowSpec
+
+
+class Client:
+    """Unified facade over the sequential executor and the DAG scheduler.
+
+    Parameters
+    ----------
+    root: directory for the default ``IntermediateStore`` (a temp dir when
+        neither ``root`` nor ``store`` is given — handy for demos/tests).
+    store: pre-built store; mutually exclusive with ``root``/``capacity_bytes``
+        /``eviction``/``codec``.
+    policy: a ``StoragePolicy`` instance or a policy name
+        (``"PT"``/``"TSAR"``/``"TSPAR"``/``"TSFR"``); names are instantiated
+        with ``with_state``.
+    registry: shared ``ModuleRegistry`` (or a plain dict, adopted by
+        reference).  Pass the same registry to several clients/engines to
+        share one module universe.
+    max_workers: DAG scheduler worker-pool size.
+    admission: ``"always"`` or the Eq. 4.9 cost gate ``"t1_gt_t2"``.
+    """
+
+    def __init__(
+        self,
+        root: str | None = None,
+        *,
+        store: IntermediateStore | None = None,
+        policy: StoragePolicy | str = "PT",
+        with_state: bool = True,
+        registry: ModuleRegistry | Mapping[str, ModuleSpec] | None = None,
+        admission: str = "always",
+        capacity_bytes: int | None = None,
+        eviction: str | None = None,
+        codec: str | None = None,
+        max_workers: int = 4,
+        max_concurrent_runs: int = 32,
+        provenance: ProvenanceLog | None = None,
+    ) -> None:
+        if store is None:
+            if root is None:
+                root = tempfile.mkdtemp(prefix="repro-store-")
+            store = IntermediateStore(
+                root,
+                capacity_bytes=capacity_bytes,
+                eviction=eviction if eviction is not None else "gain_loss",
+                codec=codec,
+            )
+        elif any(v is not None for v in (root, capacity_bytes, eviction, codec)):
+            raise ValueError(
+                "a pre-built store already fixes root/capacity_bytes/eviction/"
+                "codec; pass either the store or those options, not both"
+            )
+        if isinstance(policy, str):
+            policy = make_policy(policy, with_state=with_state)
+        self.store = store
+        self.policy = policy
+        self.registry = (
+            registry
+            if isinstance(registry, ModuleRegistry)
+            else ModuleRegistry(registry)
+        )
+        cost_model = CostModel(store=store)
+        self.executor = WorkflowExecutor(
+            store=store,
+            policy=policy,
+            registry=self.registry,
+            admission=admission,
+            provenance=provenance,
+            cost_model=cost_model,
+        )
+        self.service = WorkflowService(
+            store=store,
+            policy=policy,
+            registry=self.registry,
+            max_workers=max_workers,
+            admission=admission,
+            provenance=provenance,
+            cost_model=cost_model,
+            max_concurrent_runs=max_concurrent_runs,
+        )
+        self.recommender = Recommender(policy, store)
+        # client-level aggregate stats spanning BOTH engines (the service's
+        # own tally covers only submit()-path runs)
+        self._lock = threading.Lock()
+        self._agg = AggregateStats()
+        self._t_first: float | None = None
+        self._t_last = 0.0
+
+    # -- registration ----------------------------------------------------------
+    def module(
+        self,
+        module_id: str | None = None,
+        *,
+        cost_hint: float | None = None,
+        **default_params: Any,
+    ) -> Callable[[Callable[..., Any]], Callable[..., Any]]:
+        """``@client.module("normalize")`` decorator (see
+        :meth:`ModuleRegistry.module`)."""
+        return self.registry.module(
+            module_id, cost_hint=cost_hint, **default_params
+        )
+
+    def register(self, spec: ModuleSpec) -> None:
+        self.registry.register(spec)
+
+    def register_fn(self, module_id: str, fn, **default_params) -> None:
+        self.registry.register_fn(module_id, fn, **default_params)
+
+    # -- spec construction ------------------------------------------------------
+    def spec(self, dataset_id: str, workflow_id: str = "") -> WorkflowSpec:
+        """An empty :class:`WorkflowSpec` builder (validated against this
+        client's registry at run time)."""
+        return WorkflowSpec(dataset_id, workflow_id)
+
+    # -- bookkeeping ------------------------------------------------------------
+    def _mark_start(self) -> None:
+        with self._lock:
+            if self._t_first is None:
+                self._t_first = time.perf_counter()
+
+    def _record(self, result: RunResult | DagRunResult | None, failed: bool) -> None:
+        with self._lock:
+            self._t_last = time.perf_counter()
+            if failed or result is None:
+                self._agg.failures += 1
+            else:
+                self._agg.add_run(result)
+
+    # -- execution ---------------------------------------------------------------
+    def run(
+        self,
+        spec: WorkflowSpec | Workflow | DagWorkflow,
+        data: Any,
+    ) -> RunResult | DagRunResult:
+        """Blocking run.  Linear specs (and ``Workflow``s) execute on the
+        sequential executor; DAG-shaped specs go through the scheduler.
+        Either way the artifacts land under the same ``PrefixKey``s."""
+        self._mark_start()
+        if isinstance(spec, WorkflowSpec):
+            if spec.is_linear:
+                runnable: Workflow | DagWorkflow = spec.to_workflow(self.registry)
+            else:
+                runnable = spec.to_dag(self.registry)
+        else:
+            runnable = spec
+        try:
+            if isinstance(runnable, Workflow):
+                result: RunResult | DagRunResult = self.executor.run_workflow(
+                    runnable, data
+                )
+            else:
+                result = self.service.scheduler.run(runnable, data)
+        except Exception:
+            self._record(None, failed=True)
+            raise
+        self._record(result, failed=False)
+        return result
+
+    def submit(
+        self,
+        spec: WorkflowSpec | Workflow | DagWorkflow,
+        data: Any,
+    ) -> "Future[DagRunResult]":
+        """Non-blocking submission onto the shared scheduler (chains run as
+        chain DAGs).  Returns the run's future."""
+        self._mark_start()
+        if isinstance(spec, WorkflowSpec):
+            dag = spec.to_dag(self.registry)
+        elif isinstance(spec, Workflow):
+            dag = DagWorkflow.from_workflow(spec, registry=self.registry)
+        else:
+            dag = spec
+        fut = self.service.submit(dag, data)
+
+        def _done(f: "Future[DagRunResult]") -> None:
+            try:
+                self._record(f.result(), failed=False)
+            except Exception:  # noqa: BLE001 - delivered via the future
+                self._record(None, failed=True)
+
+        fut.add_done_callback(_done)
+        return fut
+
+    def run_steps(
+        self,
+        dataset_id: str,
+        data: Any,
+        steps: Sequence[str | tuple[str, Mapping[str, Any] | None]],
+        workflow_id: str = "",
+    ) -> RunResult | DagRunResult:
+        """Linear-pipeline shorthand."""
+        return self.run(WorkflowSpec.from_steps(dataset_id, steps, workflow_id), data)
+
+    # -- history / recommendation ------------------------------------------------
+    def observe(self, wf: WorkflowSpec | Workflow) -> None:
+        """Feed one workflow into the mined history *without executing it* —
+        the thesis' replay protocol (Ch. 4.5.1), used to warm the
+        recommendation surface from an existing corpus.
+
+        The policy's miner and replay counters advance exactly as if the
+        workflow had run, but store admissions it claims are pruned again
+        when no artifact exists: replayed history must not make real runs
+        believe (and skip storing) artifacts that were never persisted.
+        """
+        if isinstance(wf, WorkflowSpec):
+            rec = self.policy.step_paths(
+                wf.to_dag(self.registry, strict=False).paths()
+            )
+        else:
+            rec = self.policy.step(wf)
+        for prefix in rec.store:
+            key = prefix.key(self.policy.with_state)
+            if not self.store.has(key):
+                # GIL-atomic pop without the policy lock (same pattern as the
+                # store's evict listeners; see the documented lock order)
+                self.policy.stored.pop(key, None)
+
+    def replay(self, corpus: Iterable[WorkflowSpec | Workflow]) -> int:
+        """Observe a whole corpus; returns the number of workflows replayed."""
+        n = 0
+        for wf in corpus:
+            self.observe(wf)
+            n += 1
+        return n
+
+    def recommend(
+        self,
+        partial: WorkflowSpec | Workflow | str,
+        modules: Sequence[ModuleRef] = (),
+        top_k: int = 5,
+    ) -> RecommendReport:
+        """Ranked suggestions while composing a workflow.
+
+        ``partial`` is a linear (possibly empty) :class:`WorkflowSpec`, a
+        :class:`Workflow`, or a bare dataset id (then ``modules`` supplies
+        the chain built so far).  Returns reusable-prefix suggestions
+        (deepest skip points, flagged when the artifact is live) and
+        next-module suggestions mined from the observed corpus.
+        """
+        if isinstance(partial, str):
+            dataset_id, chain = partial, tuple(modules)
+        elif isinstance(partial, Workflow):
+            dataset_id, chain = partial.dataset_id, partial.modules
+        else:
+            dataset_id = partial.dataset_id
+            if len(partial) == 0:
+                chain = ()
+            else:
+                chain = partial.to_workflow(self.registry, strict=False).modules
+        return self.recommender.recommend(dataset_id, chain, top_k=top_k)
+
+    # -- reporting / lifecycle -----------------------------------------------------
+    def stats(self) -> AggregateStats:
+        """Aggregate throughput/reuse across BOTH engines (sequential runs +
+        scheduler submissions), in the same shape ``WorkflowService.stats``
+        and ``ServeEngine.aggregate_stats`` report."""
+        sf = self.service.scheduler.singleflight
+        with self._lock:
+            wall = (
+                (self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last
+                else 0.0
+            )
+            return self._agg.snapshot(wall, singleflight_waits=sf.waits)
+
+    def drain(self, timeout: float | None = None) -> None:
+        self.service.drain(timeout)
+
+    def close(self) -> None:
+        self.service.close()
+
+    def __enter__(self) -> "Client":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

@@ -1,0 +1,203 @@
+"""Recommendation surface: ranked reuse and next-module suggestions.
+
+The thesis' headline contribution (Ch. 4) is an *automatic recommendation
+technique*: while a user composes a workflow, the system surfaces (a) stored
+intermediate states the partial workflow can start from and (b) the module
+sequences users historically applied next — the interaction pattern the
+companion design study (arXiv:2010.04880) found users want *during*
+composition, not after.  This module makes that pipeline public: it reads the
+same :class:`~repro.core.rules.RuleMiner` state the storage policies maintain
+(no extra bookkeeping) and ranks:
+
+  * **reusable prefixes** — prefixes of the partial chain worth starting
+    from, deepest first (the deepest is the thesis' skip point): either the
+    policy claims them stored, or the mined history supports them (the
+    prefix appeared in >=2 pipelines — PT's obtained-from-history gate, the
+    replayed-corpus case where no artifact was ever persisted locally).
+    ``stored`` flags artifacts live in the store *right now*;
+  * **next modules** — association rules that extend the partial chain by
+    one module, ranked by confidence then support (Ch. 4.3.3's "longest
+    highest-confidence rule" ordering, applied incrementally).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from ..core.risp import StoragePolicy
+from ..core.store import IntermediateStore
+from ..core.workflow import ModuleRef, PrefixKey
+
+
+@dataclass(frozen=True)
+class Suggestion:
+    """One ranked recommendation.
+
+    ``kind`` is ``"reusable_prefix"`` (start from this stored state; its
+    depth tells how many modules the user skips) or ``"next_module"``
+    (``module_id`` extends the partial chain; ``prefix`` is the extended
+    chain the rule describes).
+    """
+
+    kind: str
+    prefix: PrefixKey
+    support: int
+    dataset_support: int
+    stored: bool
+    module_id: str | None = None
+
+    @property
+    def confidence(self) -> float:
+        return self.support / self.dataset_support if self.dataset_support else 0.0
+
+    @property
+    def depth(self) -> int:
+        return self.prefix.depth
+
+    def describe(self) -> str:
+        mods = ">".join(m.module_id for m in self.prefix.modules)
+        if self.kind == "next_module":
+            return (
+                f"next: {self.module_id} (confidence {self.confidence:.2f}, "
+                f"support {self.support}) -> {mods}"
+            )
+        live = "stored" if self.stored else "recommended"
+        return (
+            f"reuse depth {self.depth} [{live}]: {mods} "
+            f"(confidence {self.confidence:.2f}, support {self.support})"
+        )
+
+
+@dataclass
+class RecommendReport:
+    """Both suggestion lists for one partial workflow."""
+
+    dataset_id: str
+    depth: int  # partial-chain length the suggestions are relative to
+    reusable_prefixes: list[Suggestion]
+    next_modules: list[Suggestion]
+
+    @property
+    def best_reuse(self) -> Suggestion | None:
+        return self.reusable_prefixes[0] if self.reusable_prefixes else None
+
+    @property
+    def best_next(self) -> Suggestion | None:
+        return self.next_modules[0] if self.next_modules else None
+
+
+class Recommender:
+    """Ranks suggestions from a policy's mined history + the live store.
+
+    Shares the policy's ``RuleMiner`` and ``stored`` bookkeeping — feeding
+    the recommender is just running (or replaying) workflows through the
+    policy.  An index over ``(dataset, depth)`` is rebuilt lazily whenever
+    the miner has advanced, so repeated ``recommend`` calls between runs are
+    O(candidate rules), not O(all rules).
+    """
+
+    def __init__(
+        self,
+        policy: StoragePolicy,
+        store: IntermediateStore | None = None,
+    ) -> None:
+        self.policy = policy
+        self.store = store
+        self._index: dict[tuple[str, int], list[PrefixKey]] = {}
+        self._indexed_at = -1
+
+    # -- index ---------------------------------------------------------------
+    def _refresh(self) -> None:
+        miner = self.policy.miner
+        with self.policy.lock:
+            if miner.n_pipelines == self._indexed_at:
+                return
+            index: dict[tuple[str, int], list[PrefixKey]] = {}
+            for prefix in miner.iter_prefixes():
+                index.setdefault((prefix.dataset_id, prefix.depth), []).append(prefix)
+            self._index = index
+            self._indexed_at = miner.n_pipelines
+
+    def _is_live(self, key: str) -> bool:
+        return self.store is not None and self.store.has(key)
+
+    # -- queries ---------------------------------------------------------------
+    def recommend(
+        self,
+        dataset_id: str,
+        modules: Sequence[ModuleRef] = (),
+        top_k: int = 5,
+    ) -> RecommendReport:
+        """Suggestions for the partial chain ``dataset_id => modules``.
+
+        ``modules`` may be empty: then only next-module (first-module)
+        suggestions are produced.
+        """
+        self._refresh()
+        miner = self.policy.miner
+        with_state = self.policy.with_state
+        modules = tuple(modules)
+
+        # snapshot miner/policy state under the lock; store liveness probes
+        # happen after release (documented lock order: never call store
+        # methods while holding the policy lock)
+        reuse_cands: list[tuple[PrefixKey, str, int]] = []
+        next_cands: list[tuple[PrefixKey, str, int]] = []
+        with self.policy.lock:
+            ds_support = miner.dataset_support(dataset_id)
+            for k in range(len(modules), 0, -1):
+                prefix = PrefixKey(dataset_id, modules[:k])
+                key = prefix.key(with_state)
+                support = miner.support_of_key(key)
+                if key in self.policy.stored or support >= 2:
+                    reuse_cands.append((prefix, key, support))
+            chain_key = (
+                PrefixKey(dataset_id, modules).key(with_state) if modules else None
+            )
+            for cand in self._index.get((dataset_id, len(modules) + 1), ()):
+                parent = cand.parent()
+                parent_key = parent.key(with_state) if parent is not None else None
+                if parent_key != chain_key:
+                    continue
+                key = cand.key(with_state)
+                next_cands.append((cand, key, miner.support_of_key(key)))
+
+        reusable = [
+            Suggestion(
+                kind="reusable_prefix",
+                prefix=prefix,
+                support=support,
+                dataset_support=ds_support,
+                stored=self._is_live(key),
+            )
+            for prefix, key, support in reuse_cands[:top_k]
+        ]
+        nxt = [
+            Suggestion(
+                kind="next_module",
+                prefix=cand,
+                support=support,
+                dataset_support=ds_support,
+                stored=self._is_live(key),
+                module_id=cand.modules[-1].module_id,
+            )
+            for cand, key, support in next_cands
+        ]
+        nxt.sort(key=lambda s: (-s.confidence, -s.support, s.module_id or ""))
+        # one suggestion per module id (rules are per tool-state under
+        # with_state=True; a frequently re-parameterized module must not
+        # crowd every other next-module out of the report) — the kept entry
+        # is that module's highest-confidence state
+        seen_modules: set[str] = set()
+        deduped = []
+        for s in nxt:
+            if s.module_id in seen_modules:
+                continue
+            seen_modules.add(s.module_id or "")
+            deduped.append(s)
+        return RecommendReport(
+            dataset_id=dataset_id,
+            depth=len(modules),
+            reusable_prefixes=reusable,
+            next_modules=deduped[:top_k],
+        )

@@ -14,10 +14,19 @@ from .eviction import (
 from .executor import RunResult, WorkflowError, WorkflowExecutor
 from .metrics import PolicyReport, evaluate_all, evaluate_policy
 from .provenance import ProvenanceLog, RunRecord
+from .registry import ModuleRegistry, ToolStateError, UnknownModuleError
 from .risp import RISP, TSAR, TSFR, TSPAR, Recommendation, StoragePolicy, make_policy
 from .rules import Rule, RuleMiner
 from .store import ArtifactRecord, IntermediateStore, PutResult
-from .workflow import ModuleRef, ModuleSpec, PrefixKey, ToolState, Workflow
+from .workflow import (
+    ModuleRef,
+    ModuleSpec,
+    PrefixKey,
+    ToolState,
+    Workflow,
+    decode_param,
+    encode_param,
+)
 
 __all__ = [
     "ArtifactRecord",
@@ -32,6 +41,7 @@ __all__ = [
     "LocalFSBackend",
     "MemoryBackend",
     "ModuleRef",
+    "ModuleRegistry",
     "ModuleSpec",
     "PolicyReport",
     "PrefixKey",
@@ -50,12 +60,16 @@ __all__ = [
     "TSPAR",
     "TieredBackend",
     "ToolState",
+    "ToolStateError",
+    "UnknownModuleError",
     "Workflow",
     "WorkflowError",
     "WorkflowExecutor",
     "adaptive_policy",
     "adaptive_risp",
     "available_codecs",
+    "decode_param",
+    "encode_param",
     "evaluate_all",
     "evaluate_policy",
     "gain_loss_ratio",

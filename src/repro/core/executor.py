@@ -22,6 +22,7 @@ import jax
 
 from .cost import CostModel
 from .provenance import ProvenanceLog, RunRecord
+from .registry import ModuleRegistry
 from .risp import Recommendation, StoragePolicy, StoredRecord
 from .store import IntermediateStore
 from .workflow import ModuleRef, ModuleSpec, PrefixKey, Workflow
@@ -122,14 +123,22 @@ def admit_and_store(
 
 @dataclass
 class WorkflowExecutor:
+    """Sequential front door.  ``registry`` is the shared
+    :class:`~repro.core.registry.ModuleRegistry`; a plain dict is adopted by
+    reference for backward compatibility.  New code should construct engines
+    through :class:`repro.api.Client`, which wires one registry + store +
+    policy across the sequential executor and the DAG scheduler."""
+
     store: IntermediateStore
     policy: StoragePolicy
-    registry: dict[str, ModuleSpec] = field(default_factory=dict)
+    registry: ModuleRegistry = field(default_factory=ModuleRegistry)
     admission: str = "always"  # "always" | "t1_gt_t2"
     provenance: ProvenanceLog | None = None
     cost_model: CostModel | None = None
 
     def __post_init__(self) -> None:
+        if not isinstance(self.registry, ModuleRegistry):
+            self.registry = ModuleRegistry(self.registry)
         if self.cost_model is None:
             self.cost_model = CostModel(store=self.store)
         if self.admission not in ("always", "t1_gt_t2"):
@@ -141,12 +150,12 @@ class WorkflowExecutor:
     def _on_store_evict(self, key: str) -> None:
         self.policy.stored.pop(key, None)
 
-    # -- registration ---------------------------------------------------------
+    # -- registration (delegates to the shared registry) ----------------------
     def register(self, spec: ModuleSpec) -> None:
-        self.registry[spec.module_id] = spec
+        self.registry.register(spec)
 
     def register_fn(self, module_id: str, fn, **default_params) -> None:
-        self.register(ModuleSpec(module_id, fn, default_params))
+        self.registry.register_fn(module_id, fn, **default_params)
 
     # -- workflow construction -------------------------------------------------
     def make_workflow(
@@ -177,10 +186,7 @@ class WorkflowExecutor:
         return self.run_workflow(wf, data)
 
     def _params_for(self, ref: ModuleRef) -> dict[str, Any]:
-        spec = self.registry[ref.module_id]
-        params = dict(spec.default_params)
-        params.update({k: eval_repr(v) for k, v in ref.state.params})
-        return params
+        return self.registry.resolve_params(ref)
 
     def run_workflow(self, wf: Workflow, data: Any) -> RunResult:
         t_start = time.perf_counter()
@@ -297,7 +303,14 @@ class WorkflowExecutor:
 
 
 def eval_repr(v: str) -> Any:
-    """Inverse of the repr() applied in ToolState.from_config for plain types."""
+    """Deprecated inverse of the ``repr()`` encoding old ``ToolState``s used.
+
+    ``ToolState.from_config`` now renders params through the canonical,
+    invertible :func:`repro.core.workflow.encode_param`; decode with
+    :func:`repro.core.workflow.decode_param`, which still falls back to this
+    literal-eval behaviour for legacy repr-encoded params.  Kept only so
+    persisted pre-canonical states (and external callers) keep resolving.
+    """
     import ast
 
     try:

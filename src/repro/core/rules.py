@@ -63,6 +63,14 @@ class RuleMiner:
     def support(self, prefix: PrefixKey) -> int:
         return self._prefix_support.get(prefix.key(self.with_state), 0)
 
+    def support_of_key(self, key: str) -> int:
+        """Support by pre-rendered prefix key (the recommender's hot path)."""
+        return self._prefix_support.get(key, 0)
+
+    def iter_prefixes(self):
+        """All distinct mined prefixes (one per rule)."""
+        return iter(self._prefix_by_key.values())
+
     def dataset_support(self, dataset_id: str) -> int:
         return self._dataset_support.get(dataset_id, 0)
 

@@ -21,34 +21,73 @@ from typing import Any, Callable, Iterator, Mapping, Sequence
 _ADDR_RE = re.compile(r" at 0x[0-9a-fA-F]+")
 
 
-def _canonical(obj: Any) -> Any:
+def _canonical(obj: Any, invertible: bool = False) -> Any:
     """Reduce ``obj`` to a JSON-safe form whose rendering is identical across
     processes.  ``repr`` fallbacks that embed memory addresses would make the
     digest unique per run — silently defeating cross-process reuse — so
-    address-bearing reprs are rejected rather than hashed."""
-    if obj is None or isinstance(obj, (bool, int, float, str)):
+    address-bearing reprs are rejected rather than hashed.
+
+    ``invertible=True`` selects the tool-state-parameter variant: every
+    encoding must be reversible by :func:`_decanonical`, so tuples are tagged
+    (vs. lists), bytes/arrays carry their raw content instead of a digest, and
+    ``repr`` fallbacks are only accepted when ``ast.literal_eval`` can undo
+    them.  Values that cannot round-trip raise ``TypeError`` loudly instead of
+    silently degrading to strings at execution time.
+    """
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
         return obj
     if isinstance(obj, bytes):
+        if invertible:
+            return {"__hexbytes__": obj.hex()}
         return {"__bytes__": hashlib.sha256(obj).hexdigest()}
     if isinstance(obj, Mapping):
         # encoded as a tagged sorted pair-list, not a plain JSON object, so a
         # user dict like {"__set__": [...]} can never forge the sentinel
         # encodings below (which would collide with the real set/array/bytes)
+        if not invertible or all(isinstance(k, str) for k in obj):
+            return {
+                "__map__": [
+                    [str(k), _canonical(v, invertible)]
+                    for k, v in sorted(obj.items(), key=lambda kv: str(kv[0]))
+                ]
+            }
+        # non-str keys: encode both sides and sort by rendering, so the
+        # encoding is insertion-order independent like every other container
         return {
-            "__map__": [
-                [str(k), _canonical(v)]
-                for k, v in sorted(obj.items(), key=lambda kv: str(kv[0]))
-            ]
+            "__dictitems__": sorted(
+                (
+                    [_canonical(k, True), _canonical(v, True)]
+                    for k, v in obj.items()
+                ),
+                key=lambda kv: json.dumps(kv, sort_keys=True),
+            )
         }
-    if isinstance(obj, (list, tuple)):
+    elif isinstance(obj, tuple):
+        if invertible:
+            return {"__tuple__": [_canonical(x, invertible) for x in obj]}
         return [_canonical(x) for x in obj]
-    if isinstance(obj, (set, frozenset)):
-        return {"__set__": sorted(json.dumps(_canonical(x), sort_keys=True) for x in obj)}
+    elif isinstance(obj, list):
+        return [_canonical(x, invertible) for x in obj]
+    elif isinstance(obj, (set, frozenset)):
+        tag = "__frozenset__" if invertible and isinstance(obj, frozenset) else "__set__"
+        return {
+            tag: sorted(
+                json.dumps(_canonical(x, invertible), sort_keys=True) for x in obj
+            )
+        }
     # array-likes (numpy / jax / ml_dtypes): digest dtype + shape + raw bytes
-    if hasattr(obj, "dtype") and hasattr(obj, "shape") and hasattr(obj, "tobytes"):
+    elif hasattr(obj, "dtype") and hasattr(obj, "shape") and hasattr(obj, "tobytes"):
         import numpy as np
 
         arr = np.ascontiguousarray(obj)
+        if invertible:
+            return {
+                "__ndarray__": str(arr.dtype),
+                "shape": list(arr.shape),
+                "hex": arr.tobytes().hex(),
+            }
         return {
             "__array__": str(arr.dtype),
             "shape": list(arr.shape),
@@ -60,7 +99,89 @@ def _canonical(obj: Any) -> Any:
             f"cannot stably hash {type(obj).__name__!r}: repr embeds a memory "
             "address; give it a value-based __repr__ or pass primitives/arrays"
         )
+    if invertible:
+        import ast
+
+        try:
+            ast.literal_eval(r)
+        except (ValueError, SyntaxError) as e:
+            raise TypeError(
+                f"tool-state parameter of type {type(obj).__name__!r} is not "
+                f"value-recoverable (repr {r!r} is not a Python literal); pass "
+                "primitives, tuples/lists/dicts/sets of them, or arrays"
+            ) from e
     return {"__repr__": r}
+
+
+def _decanonical(obj: Any) -> Any:
+    """Invert :func:`_canonical` (invertible mode) back to Python values."""
+    if isinstance(obj, dict):
+        if "__tuple__" in obj:
+            return tuple(_decanonical(x) for x in obj["__tuple__"])
+        if "__map__" in obj:
+            return {k: _decanonical(v) for k, v in obj["__map__"]}
+        if "__set__" in obj:
+            return {_decanonical(json.loads(s)) for s in obj["__set__"]}
+        if "__frozenset__" in obj:
+            return frozenset(
+                _decanonical(json.loads(s)) for s in obj["__frozenset__"]
+            )
+        if "__dictitems__" in obj:
+            return {
+                _decanonical(k): _decanonical(v) for k, v in obj["__dictitems__"]
+            }
+        if "__hexbytes__" in obj:
+            return bytes.fromhex(obj["__hexbytes__"])
+        if "__ndarray__" in obj:
+            import numpy as np
+
+            raw = bytes.fromhex(obj["hex"])
+            arr = np.frombuffer(raw, dtype=np.dtype(obj["__ndarray__"]))
+            return arr.reshape(obj["shape"]).copy()
+        if "__repr__" in obj:
+            import ast
+
+            try:
+                return ast.literal_eval(obj["__repr__"])
+            except (ValueError, SyntaxError):
+                return obj["__repr__"]
+        raise TypeError(f"cannot decode digest-only encoding {sorted(obj)!r}")
+    if isinstance(obj, list):
+        return [_decanonical(x) for x in obj]
+    return obj
+
+
+def encode_param(value: Any) -> str:
+    """Canonical, *invertible* rendering of one tool-state parameter value.
+
+    The encoding is deterministic across processes (same guarantees as
+    ``_stable_hash``'s canonical form) and :func:`decode_param` recovers the
+    original value exactly — including tuples, floats, nested containers,
+    bytes, and small arrays.  Non-recoverable values raise ``TypeError`` at
+    construction time instead of degrading to strings at execution time.
+    """
+    return json.dumps(_canonical(value, invertible=True), sort_keys=True)
+
+
+def decode_param(encoded: str) -> Any:
+    """Inverse of :func:`encode_param`.
+
+    Legacy ``repr()``-encoded params (pre-canonical ``ToolState``s, e.g. from
+    persisted specs) fall back to ``ast.literal_eval`` — the deprecated
+    :func:`repro.core.executor.eval_repr` behaviour — so old documents keep
+    resolving.
+    """
+    try:
+        payload = json.loads(encoded)
+    except (ValueError, TypeError):
+        # legacy repr() encoding ("'s'", "(1, 2)", "{'a': 1}", ...)
+        import ast
+
+        try:
+            return ast.literal_eval(encoded)
+        except (ValueError, SyntaxError):
+            return encoded
+    return _decanonical(payload)
 
 
 def _stable_hash(obj: Any) -> str:
@@ -85,10 +206,22 @@ class ToolState:
 
     @classmethod
     def from_config(cls, config: Mapping[str, Any] | None) -> "ToolState":
+        """Canonicalize a parameter mapping.
+
+        Values are rendered through :func:`encode_param` — deterministic
+        across processes and exactly invertible by :meth:`to_config` (tuples
+        stay tuples, floats keep full precision, nested containers survive).
+        Values that cannot round-trip raise ``TypeError`` here rather than
+        silently degrading to strings when a module is executed.
+        """
         if not config:
             return cls()
-        items = tuple(sorted((str(k), repr(v)) for k, v in config.items()))
+        items = tuple(sorted((str(k), encode_param(v)) for k, v in config.items()))
         return cls(items)
+
+    def to_config(self) -> dict[str, Any]:
+        """Recover the parameter mapping (inverse of :meth:`from_config`)."""
+        return {k: decode_param(v) for k, v in self.params}
 
     @property
     def digest(self) -> str:

@@ -24,6 +24,31 @@ from typing import Any, Mapping, Sequence
 from ..core.workflow import ModuleRef, ModuleSpec, PrefixKey, ToolState, Workflow
 
 
+def kahn_order(parents: Mapping[str, Sequence[str]]) -> tuple[str, ...]:
+    """Deterministic topological order over ``node -> parents`` (Kahn's
+    algorithm; ties broken by mapping insertion order).  Raises
+    ``ValueError`` naming the offending nodes on a cycle.  Shared by
+    :class:`DagWorkflow` and ``repro.api.WorkflowSpec``."""
+    remaining = {nid: len(ps) for nid, ps in parents.items()}
+    children: dict[str, list[str]] = {nid: [] for nid in parents}
+    for nid, ps in parents.items():
+        for p in ps:
+            children[p].append(nid)
+    order: list[str] = []
+    ready = [nid for nid in parents if remaining[nid] == 0]
+    while ready:
+        nid = ready.pop(0)
+        order.append(nid)
+        for c in children[nid]:
+            remaining[c] -= 1
+            if remaining[c] == 0:
+                ready.append(c)
+    if len(order) != len(parents):
+        cyclic = sorted(nid for nid in parents if nid not in order)
+        raise ValueError(f"workflow graph has a cycle through {cyclic}")
+    return tuple(order)
+
+
 @dataclass(frozen=True)
 class DagNode:
     """A module occurrence inside a DAG: node id + module ref + fan-in."""
@@ -155,23 +180,7 @@ class DagWorkflow:
 
     def topo_order(self) -> tuple[str, ...]:
         """Deterministic topological order (Kahn; ties broken by insertion)."""
-        remaining = {nid: len(n.parents) for nid, n in self._nodes.items()}
-        children: dict[str, list[str]] = {nid: [] for nid in self._nodes}
-        for n in self._nodes.values():
-            for p in n.parents:
-                children[p].append(n.node_id)
-        order: list[str] = []
-        ready = [nid for nid in self._nodes if remaining[nid] == 0]
-        while ready:
-            nid = ready.pop(0)
-            order.append(nid)
-            for c in children[nid]:
-                remaining[c] -= 1
-                if remaining[c] == 0:
-                    ready.append(c)
-        if len(order) != len(self._nodes):
-            raise ValueError("workflow graph has a cycle")
-        return tuple(order)
+        return kahn_order({nid: n.parents for nid, n in self._nodes.items()})
 
     # -- identity / decomposition -------------------------------------------
     def chain_nodes(self, node_id: str) -> tuple[str, ...] | None:

@@ -30,8 +30,9 @@ from typing import Any
 import jax
 
 from ..core.cost import CostModel
-from ..core.executor import _nbytes, admit_and_store, eval_repr
+from ..core.executor import _nbytes, admit_and_store
 from ..core.provenance import ProvenanceLog, RunRecord
+from ..core.registry import ModuleRegistry
 from ..core.risp import StoragePolicy, StoredRecord
 from ..core.store import IntermediateStore
 from ..core.workflow import ModuleRef, ModuleSpec, PrefixKey, Workflow
@@ -110,7 +111,7 @@ class DagScheduler:
 
     store: IntermediateStore
     policy: StoragePolicy
-    registry: dict[str, ModuleSpec] = field(default_factory=dict)
+    registry: ModuleRegistry = field(default_factory=ModuleRegistry)
     max_workers: int = 4
     admission: str = "always"  # "always" | "t1_gt_t2"
     provenance: ProvenanceLog | None = None
@@ -118,6 +119,8 @@ class DagScheduler:
     singleflight: SingleFlight = field(default_factory=SingleFlight)
 
     def __post_init__(self) -> None:
+        if not isinstance(self.registry, ModuleRegistry):
+            self.registry = ModuleRegistry(self.registry)
         if self.cost_model is None:
             self.cost_model = CostModel(store=self.store)
         if self.admission not in ("always", "t1_gt_t2"):
@@ -144,22 +147,19 @@ class DagScheduler:
         self._pool.shutdown(wait=True)
         self.store.remove_evict_listener(self._on_store_evict)
 
-    # -- registration (same surface as WorkflowExecutor) ---------------------
+    # -- registration (delegates to the shared registry) ----------------------
     def register(self, spec: ModuleSpec) -> None:
-        self.registry[spec.module_id] = spec
+        self.registry.register(spec)
 
     def register_fn(self, module_id: str, fn, **default_params) -> None:
-        self.register(ModuleSpec(module_id, fn, default_params))
+        self.registry.register_fn(module_id, fn, **default_params)
 
     def dag(self, dataset_id: str, workflow_id: str = "") -> DagWorkflow:
         """A DAG builder whose tool states resolve through this registry."""
         return DagWorkflow(dataset_id, workflow_id, registry=self.registry)
 
     def _params_for(self, ref: ModuleRef) -> dict[str, Any]:
-        spec = self.registry[ref.module_id]
-        params = dict(spec.default_params)
-        params.update({k: eval_repr(v) for k, v in ref.state.params})
-        return params
+        return self.registry.resolve_params(ref)
 
     # -- execution -----------------------------------------------------------
     def run(self, dag: DagWorkflow | Workflow, data: Any) -> DagRunResult:

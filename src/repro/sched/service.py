@@ -23,6 +23,7 @@ from typing import Any, Mapping, Sequence
 
 from ..core.cost import CostModel
 from ..core.provenance import ProvenanceLog
+from ..core.registry import ModuleRegistry
 from ..core.risp import StoragePolicy
 from ..core.store import IntermediateStore
 from ..core.workflow import ModuleSpec, Workflow
@@ -38,7 +39,7 @@ class WorkflowService:
         self,
         store: IntermediateStore,
         policy: StoragePolicy,
-        registry: dict[str, ModuleSpec] | None = None,
+        registry: ModuleRegistry | dict[str, ModuleSpec] | None = None,
         max_workers: int = 4,
         admission: str = "always",
         provenance: ProvenanceLog | None = None,
@@ -48,7 +49,7 @@ class WorkflowService:
         self.scheduler = DagScheduler(
             store=store,
             policy=policy,
-            registry=registry if registry is not None else {},
+            registry=registry if registry is not None else ModuleRegistry(),
             max_workers=max_workers,
             admission=admission,
             provenance=provenance,
@@ -57,12 +58,7 @@ class WorkflowService:
         self._lock = threading.Lock()
         self._t_first: float | None = None
         self._t_last: float = 0.0
-        self._runs = 0
-        self._failures = 0
-        self._busy_s = 0.0
-        self._units_total = 0
-        self._units_skipped = 0
-        self._stored = 0
+        self._agg = AggregateStats()
         # a submission burst must not spawn a thread per run: coordinators
         # run on a bounded pool, excess dispatch loops queue
         self._coord_pool = ThreadPoolExecutor(
@@ -78,6 +74,10 @@ class WorkflowService:
     @property
     def policy(self) -> StoragePolicy:
         return self.scheduler.policy
+
+    @property
+    def registry(self) -> ModuleRegistry:
+        return self.scheduler.registry
 
     def register(self, spec: ModuleSpec) -> None:
         self.scheduler.register(spec)
@@ -101,16 +101,12 @@ class WorkflowService:
                 result = self.scheduler.run(dag, data)
             except BaseException as e:  # noqa: BLE001 - delivered via future
                 with self._lock:
-                    self._failures += 1
+                    self._agg.failures += 1
                     self._t_last = time.perf_counter()
                 fut.set_exception(e)
             else:
                 with self._lock:
-                    self._runs += 1
-                    self._busy_s += result.total_seconds
-                    self._units_total += len(result.module_seconds)
-                    self._units_skipped += result.n_skipped
-                    self._stored += len(result.stored_keys)
+                    self._agg.add_run(result)
                     self._t_last = time.perf_counter()
                 fut.set_result(result)
 
@@ -146,16 +142,7 @@ class WorkflowService:
                 if self._t_first is not None and self._t_last
                 else 0.0
             )
-            return AggregateStats(
-                runs=self._runs,
-                failures=self._failures,
-                wall_seconds=max(wall, 0.0),
-                busy_seconds=self._busy_s,
-                units_total=self._units_total,
-                units_skipped=self._units_skipped,
-                stored=self._stored,
-                singleflight_waits=sf.waits,
-            )
+            return self._agg.snapshot(wall, singleflight_waits=sf.waits)
 
     def drain(self, timeout: float | None = None) -> None:
         """Wait for every in-flight submission to finish."""

@@ -25,6 +25,34 @@ class AggregateStats:
     stored: int = 0
     singleflight_waits: int = 0
 
+    def add_run(self, result: "object") -> None:
+        """Fold one completed run into the tally.  ``result`` is any
+        RunResult-shaped object (``total_seconds``, ``module_seconds``,
+        ``n_skipped``, ``stored_keys``) — sequential or DAG.  Callers
+        serialize access (this mutates under their lock)."""
+        self.runs += 1
+        self.busy_seconds += result.total_seconds  # type: ignore[attr-defined]
+        self.units_total += len(result.module_seconds)  # type: ignore[attr-defined]
+        self.units_skipped += result.n_skipped  # type: ignore[attr-defined]
+        self.stored += len(result.stored_keys)  # type: ignore[attr-defined]
+
+    def snapshot(
+        self, wall_seconds: float, singleflight_waits: int = 0
+    ) -> "AggregateStats":
+        """Immutable copy of a live tally with the window-level fields filled
+        in — the reporting shape ``WorkflowService.stats`` and
+        ``Client.stats`` both return."""
+        return AggregateStats(
+            runs=self.runs,
+            failures=self.failures,
+            wall_seconds=max(wall_seconds, 0.0),
+            busy_seconds=self.busy_seconds,
+            units_total=self.units_total,
+            units_skipped=self.units_skipped,
+            stored=self.stored,
+            singleflight_waits=singleflight_waits,
+        )
+
     @property
     def throughput_rps(self) -> float:
         """Completed runs per wall-clock second across the whole window."""

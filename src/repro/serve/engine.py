@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from ..configs.base import LMConfig
 from ..core.eviction import EvictionContext, EvictionManager
+from ..core.registry import ModuleRegistry
 from ..core.risp import RISP, StoragePolicy
 from ..core.store import ArtifactRecord
 from ..core.workflow import ModuleRef, Workflow
@@ -56,6 +57,12 @@ class ServeEngine:
     # KV-snapshot memory budget: same gain-loss retention as the disk store
     snapshot_budget_bytes: int | None = None
     eviction: str = "gain_loss"
+    # optional shared ModuleRegistry: observed prompt chunks are recorded as
+    # (non-executable) modules with prefill-cost hints, so the serving
+    # workload's module universe is introspectable through the same registry
+    # the workflow engines consume (repro.api.Client wires one across all
+    # front doors)
+    registry: ModuleRegistry | None = None
 
     def __post_init__(self) -> None:
         self._snapshots: dict[str, tuple[Any, int]] = {}  # key -> (host cache, len)
@@ -77,6 +84,11 @@ class ServeEngine:
     # -- RISP bookkeeping over request chunks ------------------------------
     def _workflow(self, chunks: list[np.ndarray]) -> Workflow:
         mods = tuple(ModuleRef(_chunk_id(c)) for c in chunks)
+        if self.registry is not None:
+            for m in mods:
+                self.registry.ensure(
+                    m.module_id, cost_hint=self._chunk_prefill_s or None
+                )
         return Workflow("prompts", mods, workflow_id=f"req{self.policy.n_pipelines}")
 
     def _snapshot(self, key: str, cache: Any, length: int, depth: int) -> bool:

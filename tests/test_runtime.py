@@ -93,11 +93,13 @@ def test_train_driver_failure_recovery(tmp_path):
 
 
 def test_serve_engine_prefix_reuse():
+    from repro.core.registry import ModuleRegistry
     from repro.serve import ServeEngine
 
     cfg = get_config("tinyllama-1.1b", smoke=True)
     params = init_params(jax.random.PRNGKey(1), build_param_specs(cfg, CELL), cfg.dtype)
-    eng = ServeEngine(cfg, params, max_len=128, chunk=8)
+    registry = ModuleRegistry()
+    eng = ServeEngine(cfg, params, max_len=128, chunk=8, registry=registry)
     rng = np.random.default_rng(0)
     system = rng.integers(0, cfg.vocab, size=24).tolist()  # shared system prompt
     outs = []
@@ -113,6 +115,12 @@ def test_serve_engine_prefix_reuse():
         (s.chunks_skipped, s.n_chunks) for s in stats
     ]
     assert eng.n_snapshots >= 1
+    # observed chunk modules land in the shared registry (non-executable)
+    assert len(registry) >= stats[0].n_chunks
+    import pytest
+
+    with pytest.raises(NotImplementedError, match="observed"):
+        next(iter(registry.values())).fn(None)
 
 
 def test_serve_engine_reuse_matches_cold():
