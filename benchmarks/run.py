@@ -13,6 +13,7 @@ def main() -> None:
         bench_eviction,
         bench_prefix_cache,
         bench_recommend,
+        bench_remote_store,
         bench_risp,
         bench_serving_load,
         bench_time_gain,
@@ -28,6 +29,7 @@ def main() -> None:
         ("eviction (gain-loss vs LRU, arXiv 2202.06473)", bench_eviction.run),
         ("dag_scheduler (Ch. 6.3.1 DAGs, concurrent runs)", bench_dag_scheduler.run),
         ("recommend (Ch. 4 recommendation surface, repro.api)", bench_recommend.run),
+        ("remote_store (repro.net cross-process pool)", bench_remote_store.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

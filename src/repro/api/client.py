@@ -31,8 +31,10 @@ from ..core.risp import StoragePolicy, make_policy
 from ..core.store import IntermediateStore
 from ..core.workflow import ModuleRef, ModuleSpec, Workflow
 from ..sched.dag import DagWorkflow
+from ..sched.dispatch import NodeDispatcher
 from ..sched.scheduler import DagRunResult
 from ..sched.service import WorkflowService
+from ..sched.singleflight import SingleFlight
 from ..sched.stats import AggregateStats
 from .recommend import RecommendReport, Recommender
 from .spec import WorkflowSpec
@@ -44,7 +46,16 @@ class Client:
     Parameters
     ----------
     root: directory for the default ``IntermediateStore`` (a temp dir when
-        neither ``root`` nor ``store`` is given — handy for demos/tests).
+        neither ``root`` nor ``store`` nor ``store_url`` is given — handy
+        for demos/tests).
+    store_url: ``tcp://host:port`` of a ``repro.net`` store server.  The
+        client then mounts the *shared* artifact pool through a read-through
+        ``CachingBackend`` over a ``RemoteBackend``, subscribes to the
+        server's eviction-event stream (keeping ``policy.stored`` and the
+        cache consistent with fleet-wide evictions), and upgrades the
+        scheduler's single-flight to the server's lease table so N client
+        processes compute an uncomputed prefix exactly once.  Mutually
+        exclusive with ``root``/``store``.
     store: pre-built store; mutually exclusive with ``root``/``capacity_bytes``
         /``eviction``/``codec``.
     policy: a ``StoragePolicy`` instance or a policy name
@@ -55,6 +66,10 @@ class Client:
         share one module universe.
     max_workers: DAG scheduler worker-pool size.
     admission: ``"always"`` or the Eq. 4.9 cost gate ``"t1_gt_t2"``.
+    cache_bytes: local read-through cache budget (``store_url`` mode only).
+    dispatcher: optional ``repro.sched.ProcessPoolDispatcher`` — module
+        computes escape onto worker processes (the caller owns its
+        lifecycle).
     """
 
     def __init__(
@@ -62,6 +77,7 @@ class Client:
         root: str | None = None,
         *,
         store: IntermediateStore | None = None,
+        store_url: str | None = None,
         policy: StoragePolicy | str = "PT",
         with_state: bool = True,
         registry: ModuleRegistry | Mapping[str, ModuleSpec] | None = None,
@@ -72,8 +88,40 @@ class Client:
         max_workers: int = 4,
         max_concurrent_runs: int = 32,
         provenance: ProvenanceLog | None = None,
+        cache_bytes: int = 64 * 1024 * 1024,
+        client_id: str | None = None,
+        dispatcher: "NodeDispatcher | None" = None,
     ) -> None:
-        if store is None:
+        self._remote: "RemoteBackend | None" = None
+        singleflight: "SingleFlight | None" = None
+        if store_url is not None:
+            if store is not None or root is not None:
+                raise ValueError(
+                    "store_url mounts a remote pool; don't also pass store/root"
+                )
+            # local import: repro.api stays importable without repro.net only
+            # in spirit — net has no extra deps, but the seam keeps layering
+            # one-directional (api -> net, never net -> api)
+            from ..net import CachingBackend, DistributedSingleFlight, RemoteBackend
+
+            self._remote = RemoteBackend(store_url, client_id=client_id)
+            cache = CachingBackend(self._remote, capacity_bytes=cache_bytes)
+            store = IntermediateStore(
+                backend=cache,
+                capacity_bytes=capacity_bytes,
+                eviction=eviction if eviction is not None else "gain_loss",
+                codec=codec,
+            )
+            # fleet-wide evictions: purge the cache first, then drop local
+            # records + policy bookkeeping via the store's listeners
+            def _on_event(event: str, key: str, _cache=cache, _store=store) -> None:
+                if event == "evicted":
+                    _cache.invalidate(key)
+                    _store.on_external_evict(key)
+
+            self._remote.add_event_listener(_on_event)
+            singleflight = DistributedSingleFlight(self._remote, stored_fn=store.has)
+        elif store is None:
             if root is None:
                 root = tempfile.mkdtemp(prefix="repro-store-")
             store = IntermediateStore(
@@ -114,6 +162,8 @@ class Client:
             provenance=provenance,
             cost_model=cost_model,
             max_concurrent_runs=max_concurrent_runs,
+            singleflight=singleflight,
+            dispatcher=dispatcher,
         )
         self.recommender = Recommender(policy, store)
         # client-level aggregate stats spanning BOTH engines (the service's
@@ -305,6 +355,9 @@ class Client:
 
     def close(self) -> None:
         self.service.close()
+        self.store.flush()
+        if self._remote is not None:
+            self._remote.close()
 
     def __enter__(self) -> "Client":
         return self

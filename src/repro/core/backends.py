@@ -60,6 +60,10 @@ class StorageBackend(ABC):
     def read_meta(self, name: str) -> str | None:
         """Read store-level metadata, or None if absent."""
 
+    def nbytes(self, key: str) -> int:
+        """Total stored bytes of artifact ``key`` (0 if absent)."""
+        raise NotImplementedError(f"{self.name} backend does not track sizes")
+
 
 class LocalFSBackend(StorageBackend):
     """Filesystem backend with the seed's content-addressed layout."""
@@ -77,7 +81,11 @@ class LocalFSBackend(StorageBackend):
     def write_blob(self, key: str, name: str, data: bytes) -> int:
         d = self._obj_dir(key)
         d.mkdir(parents=True, exist_ok=True)
-        (d / name).write_bytes(data)
+        # write-then-rename (same discipline as write_meta): a reader racing
+        # an overwrite sees the old or the new blob, never a torn one
+        tmp = d / f".{name}.tmp.{os.getpid()}.{threading.get_ident()}"
+        tmp.write_bytes(data)
+        os.replace(tmp, d / name)
         return len(data)
 
     def read_blob(self, key: str, name: str) -> bytes:
@@ -101,6 +109,16 @@ class LocalFSBackend(StorageBackend):
     def read_meta(self, name: str) -> str | None:
         p = self.root / name
         return p.read_text() if p.exists() else None
+
+    def nbytes(self, key: str) -> int:
+        d = self._obj_dir(key)
+        if not d.exists():
+            return 0
+        return sum(
+            f.stat().st_size
+            for f in d.iterdir()
+            if f.is_file() and not f.name.startswith(".")  # skip tmp leftovers
+        )
 
 
 class MemoryBackend(StorageBackend):
@@ -143,6 +161,13 @@ class TieredBackend(StorageBackend):
     ``hot_capacity_bytes``, least-recently-used *artifacts* (whole
     namespaces, so a manifest never outlives its blobs) are demoted —
     dropped from memory only; cold copies are untouched.
+
+    Thread-safety: one lock guards the hot-tier bookkeeping (LRU order,
+    byte accounting, the memory tier itself) so a concurrent ``_shrink_hot``
+    can never race a promote into inconsistent accounting or crash an LRU
+    iteration mid-scan; a read that loses its hot entry mid-flight falls
+    back to the (authoritative) cold tier.  Cold-tier I/O — potentially a
+    slow disk or a network hop — always happens *outside* the lock.
     """
 
     name = "tiered"
@@ -156,18 +181,20 @@ class TieredBackend(StorageBackend):
         self.cold = cold
         self.hot = hot or MemoryBackend()
         self.hot_capacity_bytes = hot_capacity_bytes
+        self._lock = threading.RLock()
         self._lru: OrderedDict[str, None] = OrderedDict()  # key -> (LRU order)
         self._hot_nbytes = 0  # running total; avoids O(keys) rescans
         self.promotions = 0
         self.demotions = 0
 
-    # -- hot-tier bookkeeping ------------------------------------------------
+    # -- hot-tier bookkeeping (callers hold self._lock) -----------------------
     def _touch(self, key: str) -> None:
         self._lru.pop(key, None)
         self._lru[key] = None
 
     def _hot_bytes(self) -> int:
-        return self._hot_nbytes
+        with self._lock:
+            return self._hot_nbytes
 
     def _hot_write(self, key: str, name: str, data: bytes) -> None:
         prev = self.hot._objects.get(key, {}).get(name)
@@ -190,33 +217,50 @@ class TieredBackend(StorageBackend):
     def write_blob(self, key: str, name: str, data: bytes) -> int:
         n = self.cold.write_blob(key, name, data)
         if len(data) <= self.hot_capacity_bytes:
-            self._hot_write(key, name, data)
-            self._shrink_hot()
+            with self._lock:
+                self._hot_write(key, name, data)
+                self._shrink_hot()
         return n
 
     def read_blob(self, key: str, name: str) -> bytes:
-        try:
-            data = self.hot.read_blob(key, name)
-            self._touch(key)
-            return data
-        except KeyError:
-            pass
+        with self._lock:
+            try:
+                data = self.hot.read_blob(key, name)
+            except KeyError:
+                # demoted by a concurrent _shrink_hot/delete mid-read: the
+                # cold tier is authoritative, fall through to it
+                pass
+            else:
+                self._touch(key)
+                return data
         data = self.cold.read_blob(key, name)
         if len(data) <= self.hot_capacity_bytes:
-            self._hot_write(key, name, data)
-            self.promotions += 1
-            self._shrink_hot()
+            with self._lock:
+                self._hot_write(key, name, data)
+                self.promotions += 1
+                self._shrink_hot()
         return data
 
     def delete(self, key: str) -> None:
-        self._hot_drop(key)
+        with self._lock:
+            self._hot_drop(key)
         self.cold.delete(key)
+        # a read that fetched cold bytes before the delete may promote them
+        # concurrently; drop again so the hot tier doesn't keep orphan bytes
+        with self._lock:
+            self._hot_drop(key)
 
     def exists(self, key: str) -> bool:
-        return self.hot.exists(key) or self.cold.exists(key)
+        # cold is authoritative: every write lands there, and hot may briefly
+        # hold resurrected blobs from a promote racing a delete — those must
+        # not make an evicted artifact look alive
+        return self.cold.exists(key)
 
     def write_meta(self, name: str, text: str) -> None:
         self.cold.write_meta(name, text)
 
     def read_meta(self, name: str) -> str | None:
         return self.cold.read_meta(name)
+
+    def nbytes(self, key: str) -> int:
+        return self.cold.nbytes(key)

@@ -66,11 +66,14 @@ def probe_reusable_prefix(
     store: IntermediateStore,
     policy: StoragePolicy,
     candidate: PrefixKey | None,
+    keep: frozenset[str] | set[str] = frozenset(),
 ) -> tuple[PrefixKey | None, Any, float]:
     """Load the longest stored prefix at-or-below ``candidate``.
 
     Walks parents of ``candidate`` until one has a live artifact; stale
-    policy bookkeeping for evicted prefixes is dropped along the way.
+    policy bookkeeping for evicted prefixes is dropped along the way —
+    except keys in ``keep``: the caller's *planned* stores for the current
+    run, which legitimately have no artifact yet.
     Returns ``(prefix, value, load_seconds)`` — ``(None, None, 0.0)`` when
     nothing is reusable.
     """
@@ -86,7 +89,8 @@ def probe_reusable_prefix(
                 continue
             return candidate, value, time.perf_counter() - t0
         # artifact evicted: drop stale bookkeeping, try shorter prefix
-        policy.stored.pop(key, None)
+        if key not in keep:
+            policy.stored.pop(key, None)
         candidate = candidate.parent()
     return None, None, 0.0
 
@@ -192,10 +196,27 @@ class WorkflowExecutor:
         t_start = time.perf_counter()
         rec: Recommendation = self.policy.step(wf)
 
-        # 1) reuse the longest stored prefix whose artifact still exists
+        # 1) reuse the longest stored prefix whose artifact still exists.
+        # Probe from the FULL chain, not just the policy's recommendation:
+        # the store may hold prefixes this policy instance never admitted —
+        # another process/engine sharing the (possibly remote) store put
+        # them there, and content-addressed keys make them interchangeable.
+        # Cost: up to len(wf) presence probes per run (file stats locally,
+        # ~ms round trips remotely) — presence must stay authoritative, and
+        # any cheaper hint (records / shared index) would miss exactly the
+        # cross-process artifacts this probe exists to find.
+        candidate = wf.prefix(len(wf)) if len(wf) else None
+        planned = {p.key(self.policy.with_state) for p in rec.store}
         reused, loaded, load_s = probe_reusable_prefix(
-            self.store, self.policy, rec.reuse
+            self.store, self.policy, candidate, keep=planned
         )
+        if reused is not None:
+            # adopt the fact into local bookkeeping so later planning
+            # (and eviction listeners) see what we just relied on
+            self.policy.stored.setdefault(
+                reused.key(self.policy.with_state),
+                StoredRecord(reused, self.policy.n_pipelines),
+            )
         start_idx = reused.depth if reused is not None else 0
         value = loaded if reused is not None else data
 

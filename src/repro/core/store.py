@@ -82,6 +82,13 @@ class IntermediateStore:
         lowest-value artifacts (per ``eviction``) until the store fits.
     eviction: ``"gain_loss"`` (default) or ``"lru"``, or an
         :class:`EvictionPolicy` instance.
+    index_flush_every: persist ``index.json`` after at most this many index
+        mutations (puts/evicts/hit-stat updates) ...
+    index_flush_interval_s: ... or when the last flush is older than this,
+        whichever comes first.  ``index.json`` is a crash-safe *cache* of
+        stats, not the source of truth — artifact existence is always
+        re-verified against the backend, so a crash between flushes loses
+        at most some hit statistics, never correctness.
     """
 
     def __init__(
@@ -93,6 +100,8 @@ class IntermediateStore:
         codec: str | Codec | None = None,
         capacity_bytes: int | None = None,
         eviction: str | Any = "gain_loss",
+        index_flush_every: int = 64,
+        index_flush_interval_s: float = 1.0,
     ) -> None:
         if backend is None:
             if root is None:
@@ -103,15 +112,18 @@ class IntermediateStore:
         self.evictor = EvictionManager(capacity_bytes, eviction)
         self.records: dict[str, ArtifactRecord] = {}
         self._evict_listeners: list[Callable[[str], None]] = []
-        self._gets_since_flush = 0
+        self.index_flush_every = max(1, index_flush_every)
+        self.index_flush_interval_s = index_flush_interval_s
+        self._dirty = False
+        self._mutations_since_flush = 0
+        self._last_flush = time.monotonic()
+        self._shared_index_cache: tuple[float, dict[str, Any]] | None = None
         # one reentrant lock serializes index/manifest mutation so concurrent
         # scheduler workers can't corrupt ``records`` or interleave partial
         # writes of ``index.json`` (evict listeners run while it is held —
         # they must not call back into the store or take the policy lock)
         self._lock = threading.RLock()
         self._load_index()
-
-    _GET_FLUSH_EVERY = 16  # persist hit stats at most every N get() calls
 
     @property
     def capacity_bytes(self) -> int | None:
@@ -128,11 +140,101 @@ class IntermediateStore:
         self.backend.write_meta(
             "index.json", json.dumps({k: vars(v) for k, v in self.records.items()})
         )
+        self._dirty = False
+        self._mutations_since_flush = 0
+        self._last_flush = time.monotonic()
+
+    def _mark_dirty(self) -> None:
+        """Record an index mutation; flush on a count/age threshold rather
+        than per mutation (a store with n artifacts would otherwise rewrite
+        the O(n) index n times — O(n^2) churn).  Callers hold ``_lock``."""
+        self._dirty = True
+        self._mutations_since_flush += 1
+        if (
+            self._mutations_since_flush >= self.index_flush_every
+            or time.monotonic() - self._last_flush >= self.index_flush_interval_s
+        ):
+            self._flush_index()
+
+    def flush(self) -> None:
+        """Persist the index now if it has unflushed mutations."""
+        with self._lock:
+            if self._dirty:
+                self._flush_index()
+
+    def close(self) -> None:
+        self.flush()
+
+    def __enter__(self) -> "IntermediateStore":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # best-effort: never raise during teardown
+        try:
+            self.flush()
+        except Exception:  # noqa: BLE001
+            pass
 
     # -- helpers -------------------------------------------------------------
     def has(self, key: str) -> bool:
         with self._lock:
-            return key in self.records and self.backend.exists(key)
+            if key in self.records:
+                if self.backend.exists(key):
+                    return True
+                # phantom record: the artifact vanished without us hearing
+                # (evicted fleet-wide before we connected, crashed writer,
+                # stale shared index).  Prune it so budget accounting never
+                # counts bytes that are not there, and tell listeners so
+                # policy bookkeeping converges like any other eviction.
+                del self.records[key]
+                self._dirty = True
+                self._mutations_since_flush += 1
+                for fn in self._evict_listeners:
+                    fn(key)
+                return False
+            # a sibling process sharing this backend (remote store) may have
+            # persisted the artifact after our index snapshot: adopt it
+            if self.backend.exists(key):
+                self._adopt_record(key)
+                return True
+            return False
+
+    def _shared_index(self) -> dict[str, Any]:
+        """The pool's ``index.json``, parsed, cached for one flush interval —
+        adopting k sibling artifacts must not cost k full-index transfers.
+        Callers hold ``_lock``."""
+        now = time.monotonic()
+        cached = self._shared_index_cache
+        if cached is not None and now - cached[0] < max(self.index_flush_interval_s, 1.0):
+            return cached[1]
+        parsed: dict[str, Any] = {}
+        raw = self.backend.read_meta("index.json")
+        if raw:
+            try:
+                parsed = json.loads(raw)
+            except json.JSONDecodeError:
+                parsed = {}
+        self._shared_index_cache = (now, parsed)
+        return parsed
+
+    def _adopt_record(self, key: str) -> None:
+        """Create a local record for an artifact another process stored.
+
+        Prefer the shared ``index.json`` entry (it carries real stats); when
+        the writer has not flushed yet (or our cached view predates it),
+        synthesize a minimal record from the backend's byte count.  Callers
+        hold ``_lock``."""
+        entry = self._shared_index().get(key)
+        if entry:
+            self.records[key] = ArtifactRecord(**entry)
+            return
+        try:
+            nb = int(self.backend.nbytes(key))
+        except NotImplementedError:
+            nb = 0
+        self.records[key] = ArtifactRecord(key, nbytes_raw=nb, nbytes_disk=nb, save_s=0.0)
 
     def _blob_name(self, stem: str) -> str:
         return f"{stem}.npy{self.codec.suffix}"
@@ -165,7 +267,26 @@ class IntermediateStore:
         """Drop an artifact and notify listeners (policy bookkeeping)."""
         with self._lock:
             self._evict_batch([key])
-            self._flush_index()
+            self._mark_dirty()
+
+    def on_external_evict(self, key: str) -> None:
+        """A sibling process evicted ``key`` at the shared backend: drop the
+        local record and notify listeners — the backend delete already
+        happened remotely.  Wired to the remote store's eviction-event
+        stream so every client's ``policy.stored`` view converges.
+
+        Runs on the backend's event thread, so it only *marks* the index
+        dirty (no ``_mark_dirty`` threshold check): an inline flush would be
+        a synchronous network write back into the backend from its own
+        event loop — the next regular mutation or ``flush()`` persists it.
+        """
+        with self._lock:
+            if key in self.records:
+                del self.records[key]
+                self._dirty = True
+                self._mutations_since_flush += 1
+            for fn in self._evict_listeners:
+                fn(key)
 
     def _evict_batch(self, keys: list[str]) -> None:
         """Drop artifacts + notify listeners without flushing per victim;
@@ -271,7 +392,7 @@ class IntermediateStore:
             key, nbytes_raw, nbytes_disk, dt, compute_s=compute_seconds
         )
         evicted = self._enforce_budget(incoming=key)
-        self._flush_index()
+        self._mark_dirty()
         # a value-aware policy may decide the newcomer itself is the victim:
         # it displaces only artifacts worth less per byte than itself
         return PutResult(
@@ -284,10 +405,17 @@ class IntermediateStore:
             return self._get_locked(key, sharding)
 
     def _get_locked(self, key: str, sharding: jax.sharding.Sharding | None) -> Any:
-        if not self.has(key):
-            raise KeyError(key)
         t0 = time.perf_counter()
-        manifest = json.loads(self.backend.read_blob(key, "manifest.json"))
+        # optimistic read: the manifest itself is the existence proof, so a
+        # fully-cached get costs ZERO backend round trips (has() would pay an
+        # uncacheable exists() probe per call — presence stays authoritative
+        # for *planning*, but a load can trust the blob it actually got)
+        try:
+            manifest = json.loads(self.backend.read_blob(key, "manifest.json"))
+        except (KeyError, FileNotFoundError):
+            raise KeyError(key) from None
+        if key not in self.records:
+            self._adopt_record(key)  # stored by a sibling process
         treedef = pickle.loads(self.backend.read_blob(key, "skeleton.pkl"))
         # pre-codec manifests (seed layout) were always zstd-compressed
         codec = resolve_codec(manifest.get("codec", "zstd"))
@@ -315,13 +443,10 @@ class IntermediateStore:
         rec.load_s = dt
         rec.n_loads += 1
         rec.last_used_at = time.time()
-        # hit statistics drive eviction ranking, so they must survive restarts
-        # of read-only sessions; flush with bounded frequency to keep get()
-        # from serializing the whole index on every read
-        self._gets_since_flush += 1
-        if self._gets_since_flush >= self._GET_FLUSH_EVERY:
-            self._gets_since_flush = 0
-            self._flush_index()
+        # hit statistics drive eviction ranking, so they should survive
+        # restarts of read-only sessions; the batched-flush thresholds bound
+        # both the rewrite frequency and the window of lost stats
+        self._mark_dirty()
         return value
 
     def delete(self, key: str) -> None:
@@ -329,7 +454,7 @@ class IntermediateStore:
             if key in self.records:
                 self.backend.delete(key)
                 del self.records[key]
-                self._flush_index()
+                self._mark_dirty()
 
     # -- accounting ----------------------------------------------------------
     @property

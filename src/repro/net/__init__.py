@@ -1,0 +1,38 @@
+"""``repro.net`` — the intermediate-data store as a cross-process service.
+
+Everything below the ``StorageBackend`` seam can live in another process:
+
+  * :class:`StoreServer`     — daemon owning the shared artifact pool, plus
+    the lease table (fleet-wide single-flight) and the eviction-event stream;
+  * :class:`RemoteBackend`   — drop-in ``StorageBackend`` speaking the framed
+    TCP protocol with reconnect/retry and content-digest verification;
+  * :class:`CachingBackend`  — bounded, digest-validated read-through LRU so
+    hot prefixes are served at local speed;
+  * :class:`DistributedSingleFlight` — two-level (threads, then processes)
+    compute deduplication for uncomputed prefixes.
+
+``python -m repro.net.serve --root DIR`` starts a server; see
+``docs/remote.md`` for the protocol and deployment sketch.
+"""
+from .cache import CachingBackend
+from .client import LeaseGrant, RemoteBackend
+from .flight import DistributedSingleFlight
+from .protocol import (
+    ConnectionClosed,
+    IntegrityError,
+    ProtocolError,
+    RemoteStoreError,
+)
+from .server import StoreServer
+
+__all__ = [
+    "CachingBackend",
+    "ConnectionClosed",
+    "DistributedSingleFlight",
+    "IntegrityError",
+    "LeaseGrant",
+    "ProtocolError",
+    "RemoteBackend",
+    "RemoteStoreError",
+    "StoreServer",
+]

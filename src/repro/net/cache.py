@@ -1,0 +1,123 @@
+"""Read-through blob cache: hot prefixes at local speed, shared pool behind.
+
+``CachingBackend`` wraps any :class:`~repro.core.backends.StorageBackend`
+(in practice a :class:`~repro.net.client.RemoteBackend`) with a bounded,
+digest-validated LRU over individual blobs.  The workflow access pattern
+it exploits is extremely cache-friendly: a reused prefix is *immutable* —
+its content-addressed key never changes meaning — so a blob fetched once
+can be served locally forever, and the only invalidation that exists is
+whole-artifact eviction, delivered by the server's event stream.
+
+Every cached entry keeps the SHA-256 of its bytes and is re-verified on
+hit; a corrupted entry silently falls back to a fresh fetch.  ``exists``/
+meta ops are deliberately *not* cached: presence is the one question whose
+answer other processes change (stores, evictions), and a stale positive
+would make the planner skip a compute it still needs.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+from ..core.backends import StorageBackend
+from .protocol import digest
+
+
+class CachingBackend(StorageBackend):
+    """Bounded LRU blob cache in front of a slower (remote) backend."""
+
+    name = "caching"
+
+    def __init__(
+        self,
+        inner: StorageBackend,
+        capacity_bytes: int = 256 * 1024 * 1024,
+    ) -> None:
+        self.inner = inner
+        self.capacity_bytes = capacity_bytes
+        self._lock = threading.Lock()
+        self._blobs: OrderedDict[tuple[str, str], tuple[bytes, str]] = OrderedDict()
+        self._nbytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.validation_failures = 0
+
+    # -- cache bookkeeping (callers hold the lock) ---------------------------
+    def _insert(self, key: str, name: str, data: bytes) -> None:
+        if len(data) > self.capacity_bytes:
+            return
+        ck = (key, name)
+        prev = self._blobs.pop(ck, None)
+        if prev is not None:
+            self._nbytes -= len(prev[0])
+        self._blobs[ck] = (data, digest(data))
+        self._nbytes += len(data)
+        while self._nbytes > self.capacity_bytes and self._blobs:
+            _, (old, _d) = self._blobs.popitem(last=False)
+            self._nbytes -= len(old)
+
+    def _purge(self, key: str) -> None:
+        for ck in [ck for ck in self._blobs if ck[0] == key]:
+            data, _ = self._blobs.pop(ck)
+            self._nbytes -= len(data)
+
+    def invalidate(self, key: str) -> None:
+        """Drop every cached blob of ``key`` (wired to eviction events)."""
+        with self._lock:
+            self._purge(key)
+
+    @property
+    def cached_bytes(self) -> int:
+        with self._lock:
+            return self._nbytes
+
+    # -- StorageBackend --------------------------------------------------------
+    def write_blob(self, key: str, name: str, data: bytes) -> int:
+        n = self.inner.write_blob(key, name, data)
+        with self._lock:
+            self._insert(key, name, data)
+        return n
+
+    def read_blob(self, key: str, name: str) -> bytes:
+        with self._lock:
+            entry = self._blobs.get((key, name))
+            if entry is not None:
+                self._blobs.move_to_end((key, name))
+        if entry is not None:
+            data, want = entry
+            # hash OUTSIDE the lock: concurrent hits on large blobs must not
+            # serialize behind each other's digest computation
+            if digest(data) == want:
+                with self._lock:
+                    self.hits += 1
+                return data
+            with self._lock:
+                # bit-rot in the cache: drop (if still ours) and re-fetch
+                self.validation_failures += 1
+                cur = self._blobs.get((key, name))
+                if cur is not None and cur[0] is data:
+                    self._blobs.pop((key, name))
+                    self._nbytes -= len(data)
+        with self._lock:
+            self.misses += 1
+        data = self.inner.read_blob(key, name)
+        with self._lock:
+            self._insert(key, name, data)
+        return data
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(key)
+        with self._lock:
+            self._purge(key)
+
+    def exists(self, key: str) -> bool:
+        return self.inner.exists(key)
+
+    def write_meta(self, name: str, text: str) -> None:
+        self.inner.write_meta(name, text)
+
+    def read_meta(self, name: str) -> str | None:
+        return self.inner.read_meta(name)
+
+    def nbytes(self, key: str) -> int:
+        return self.inner.nbytes(key)

@@ -1,0 +1,362 @@
+"""``RemoteBackend`` — the store-server client, a drop-in ``StorageBackend``.
+
+``IntermediateStore(backend=RemoteBackend("tcp://host:7077"))`` gives any
+process a view onto the shared artifact pool with *zero* changes above the
+backend seam: serialization, manifests, codecs, eviction accounting, and
+policy bookkeeping all keep running client-side; only bytes cross the wire.
+
+Transport properties:
+
+  * **connection pool** — concurrent scheduler threads each check out a
+    socket (dialing on demand), so a long lease wait never blocks unrelated
+    reads;
+  * **reconnect-and-retry** — every request is idempotent at the server, so
+    transport failures (server restart, dropped conn, truncated frame)
+    are retried on a fresh connection with exponential backoff before an
+    error ever reaches the store;
+  * **digest verification** — blob reads carry the server's SHA-256 and are
+    re-fetched once on mismatch, then fail loudly with ``IntegrityError``;
+  * **event subscription** — an optional dedicated connection streams
+    server-side eviction events to registered listeners (the store's
+    ``on_external_evict``, the read-through cache's ``invalidate``), with
+    automatic resubscription after a server restart.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+import uuid
+from typing import Any, Callable
+
+from ..core.backends import StorageBackend
+from .protocol import (
+    ConnectionClosed,
+    IntegrityError,
+    ProtocolError,
+    RemoteStoreError,
+    digest,
+    parse_url,
+    recv_frame,
+    send_frame,
+)
+
+
+class LeaseGrant:
+    """Outcome of one ``lease_acquire`` round."""
+
+    __slots__ = ("granted", "token", "stored", "timed_out")
+
+    def __init__(self, granted: bool, token: str = "", stored: bool = False,
+                 timed_out: bool = False) -> None:
+        self.granted = granted
+        self.token = token
+        self.stored = stored
+        self.timed_out = timed_out
+
+
+class RemoteBackend(StorageBackend):
+    """TCP client for a :class:`~repro.net.server.StoreServer`."""
+
+    name = "remote"
+
+    def __init__(
+        self,
+        url: str,
+        *,
+        client_id: str | None = None,
+        connect_timeout_s: float = 5.0,
+        op_timeout_s: float = 120.0,
+        retries: int = 5,
+        retry_backoff_s: float = 0.05,
+        max_pool: int = 8,
+    ) -> None:
+        self.host, self.port = parse_url(url)
+        self.client_id = client_id or f"c-{uuid.uuid4().hex[:12]}"
+        self.connect_timeout_s = connect_timeout_s
+        self.op_timeout_s = op_timeout_s
+        self.retries = retries
+        self.retry_backoff_s = retry_backoff_s
+        self.max_pool = max_pool
+        self._pool: list[socket.socket] = []
+        self._pool_lock = threading.Lock()
+        self._lease_lock = threading.Lock()
+        self._lease_socks: dict[tuple[str, str], socket.socket] = {}
+        self._closed = False
+        self._listeners: list[Callable[[str, str], None]] = []
+        self._listener_lock = threading.Lock()
+        self._event_thread: threading.Thread | None = None
+        self._event_sock: socket.socket | None = None
+        self.reconnects = 0  # transport-level redials (observability/tests)
+
+    # -- connection management -------------------------------------------------
+    def _dial(self) -> socket.socket:
+        sock = socket.create_connection(
+            (self.host, self.port), timeout=self.connect_timeout_s
+        )
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(self.op_timeout_s)
+        return sock
+
+    def _checkout(self) -> socket.socket:
+        with self._pool_lock:
+            if self._pool:
+                return self._pool.pop()
+        return self._dial()
+
+    def _checkin(self, sock: socket.socket) -> None:
+        with self._pool_lock:
+            if not self._closed and len(self._pool) < self.max_pool:
+                sock.settimeout(self.op_timeout_s)  # undo per-request overrides
+                self._pool.append(sock)
+                return
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        self._closed = True
+        with self._pool_lock:
+            pool, self._pool = self._pool, []
+        with self._lease_lock:
+            pool += list(self._lease_socks.values())  # server auto-releases
+            self._lease_socks.clear()
+        for sock in pool:
+            try:
+                sock.close()
+            except OSError:
+                pass
+        if self._event_sock is not None:
+            try:
+                self._event_sock.close()
+            except OSError:
+                pass
+        if self._event_thread is not None:
+            self._event_thread.join(timeout=2)
+            self._event_thread = None
+
+    # -- request core ----------------------------------------------------------
+    def _exchange(
+        self,
+        header: dict[str, Any],
+        payload: bytes = b"",
+        *,
+        timeout_s: float | None = None,
+    ) -> tuple[dict[str, Any], bytes, socket.socket]:
+        """One request/response, retrying transport failures on fresh
+        sockets.  Returns the (healthy) socket WITHOUT checking it back in —
+        the caller decides whether to pool it or pin it."""
+        if self._closed:
+            raise RemoteStoreError("backend is closed")
+        last: Exception | None = None
+        for attempt in range(self.retries + 1):
+            try:
+                sock = self._checkout()
+            except OSError as e:  # server down/restarting: back off and redial
+                last = e
+                self.reconnects += 1
+                time.sleep(self.retry_backoff_s * (2**attempt))
+                continue
+            try:
+                if timeout_s is not None:
+                    sock.settimeout(timeout_s)
+                send_frame(sock, header, payload)
+                resp, data = recv_frame(sock)
+            except (ProtocolError, OSError) as e:
+                # the socket's framing state is unknown: never reuse it — and
+                # its pooled siblings are almost certainly from the same dead
+                # server epoch, so drop them all rather than letting stale
+                # sockets burn through the whole retry budget one by one
+                with self._pool_lock:
+                    stale, self._pool = self._pool, []
+                for s in [sock, *stale]:
+                    try:
+                        s.close()
+                    except OSError:
+                        pass
+                last = e
+                self.reconnects += 1
+                time.sleep(self.retry_backoff_s * (2**attempt))
+                continue
+            return resp, data, sock
+        raise RemoteStoreError(
+            f"store server {self.host}:{self.port} unreachable after "
+            f"{self.retries + 1} attempts: {last}"
+        ) from last
+
+    def _request(
+        self,
+        header: dict[str, Any],
+        payload: bytes = b"",
+        *,
+        timeout_s: float | None = None,
+    ) -> tuple[dict[str, Any], bytes]:
+        resp, data, sock = self._exchange(header, payload, timeout_s=timeout_s)
+        self._checkin(sock)
+        if resp.get("ok"):
+            return resp, data
+        kind = resp.get("kind", "server")
+        msg = resp.get("error", "remote store error")
+        if kind == "not_found":
+            raise KeyError(msg)
+        if kind == "integrity":
+            raise IntegrityError(msg)
+        raise RemoteStoreError(msg)
+
+    # -- StorageBackend contract -----------------------------------------------
+    def write_blob(self, key: str, name: str, data: bytes) -> int:
+        resp, _ = self._request(
+            {"op": "write_blob", "key": key, "name": name, "digest": digest(data)},
+            data,
+        )
+        return int(resp["nbytes"])
+
+    def read_blob(self, key: str, name: str) -> bytes:
+        req = {"op": "read_blob", "key": key, "name": name}
+        resp, data = self._request(req)
+        if resp.get("digest") != digest(data):
+            # one corrupt transfer is retryable; a corrupt blob at rest is not
+            resp, data = self._request(req)
+            if resp.get("digest") != digest(data):
+                raise IntegrityError(f"blob {key}/{name} failed digest verification")
+        return data
+
+    def delete(self, key: str) -> None:
+        self._request({"op": "delete", "key": key, "client_id": self.client_id})
+
+    def exists(self, key: str) -> bool:
+        resp, _ = self._request({"op": "exists", "key": key})
+        return bool(resp["exists"])
+
+    def write_meta(self, name: str, text: str) -> None:
+        self._request({"op": "write_meta", "name": name}, text.encode())
+
+    def read_meta(self, name: str) -> str | None:
+        resp, data = self._request({"op": "read_meta", "name": name})
+        if resp.get("none"):
+            return None
+        return data.decode()
+
+    def nbytes(self, key: str) -> int:
+        resp, _ = self._request({"op": "nbytes", "key": key})
+        return int(resp["nbytes"])
+
+    # -- coordination ----------------------------------------------------------
+    def lease_acquire(
+        self, key: str, *, wait: bool = True, timeout_s: float = 300.0
+    ) -> LeaseGrant:
+        resp, _, sock = self._exchange(
+            {
+                "op": "lease_acquire",
+                "key": key,
+                "client_id": self.client_id,
+                "wait": wait,
+                "timeout": timeout_s,
+            },
+            # the socket must outlive the server-side blocking wait
+            timeout_s=timeout_s + 30.0,
+        )
+        if not resp.get("ok"):
+            self._checkin(sock)
+            raise RemoteStoreError(resp.get("error", "lease_acquire failed"))
+        grant = LeaseGrant(
+            granted=bool(resp.get("granted")),
+            token=resp.get("token", ""),
+            stored=bool(resp.get("stored", False)),
+            timed_out=bool(resp.get("timeout", False)),
+        )
+        if grant.granted:
+            # the server auto-releases a lease when the connection that
+            # acquired it dies — so the carrying socket must stay pinned
+            # (out of the shared pool, immune to pool-overflow closes)
+            # until lease_release travels back over it
+            with self._lease_lock:
+                self._lease_socks[(key, grant.token)] = sock
+        else:
+            self._checkin(sock)
+        return grant
+
+    def lease_release(self, key: str, token: str, *, stored: bool) -> None:
+        with self._lease_lock:
+            sock = self._lease_socks.pop((key, token), None)
+        header = {"op": "lease_release", "key": key, "token": token, "stored": stored}
+        if sock is None:
+            # unknown pin (reconnected meanwhile): plain request; the server
+            # treats releasing an unknown lease as a no-op
+            self._request(header)
+            return
+        try:
+            sock.settimeout(self.op_timeout_s)
+            send_frame(sock, header)
+            recv_frame(sock)
+        except (ProtocolError, OSError):
+            # losing this socket releases the lease server-side anyway
+            try:
+                sock.close()
+            except OSError:
+                pass
+        else:
+            self._checkin(sock)
+
+    def server_stats(self) -> dict[str, Any]:
+        resp, _ = self._request({"op": "stats"})
+        return dict(resp["stats"])
+
+    def ping(self) -> bool:
+        resp, _ = self._request({"op": "ping"})
+        return bool(resp.get("pong"))
+
+    # -- eviction-event stream --------------------------------------------------
+    def add_event_listener(self, fn: Callable[[str, str], None]) -> None:
+        """``fn(event, key)`` runs on the event thread for every server-side
+        event (currently ``"evicted"``).  Listeners must be fast and must
+        not call back into this backend."""
+        with self._listener_lock:
+            self._listeners.append(fn)
+            if self._event_thread is None:
+                self._event_thread = threading.Thread(
+                    target=self._event_loop, name="store-events", daemon=True
+                )
+                self._event_thread.start()
+
+    def _event_loop(self) -> None:
+        backoff = self.retry_backoff_s
+        while not self._closed:
+            sock: socket.socket | None = None
+            try:
+                sock = self._dial()
+                send_frame(sock, {"op": "subscribe", "client_id": self.client_id})
+                resp, _ = recv_frame(sock)
+                if not resp.get("ok"):
+                    raise RemoteStoreError("subscribe rejected")
+                self._event_sock = sock
+                sock.settimeout(None)  # events arrive whenever they arrive
+                backoff = self.retry_backoff_s
+                while not self._closed:
+                    event, _ = recv_frame(sock)
+                    self._dispatch_event(event)
+            except (ProtocolError, OSError, RemoteStoreError):
+                if self._closed:
+                    return
+                # server restarting: resubscribe when it comes back
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 2.0)
+            finally:
+                self._event_sock = None
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+
+    def _dispatch_event(self, event: dict[str, Any]) -> None:
+        name = event.get("event", "")
+        key = event.get("key", "")
+        with self._listener_lock:
+            listeners = list(self._listeners)
+        for fn in listeners:
+            try:
+                fn(name, key)
+            except Exception:  # noqa: BLE001 - one listener must not kill the stream
+                pass

@@ -1,0 +1,90 @@
+"""Distributed single-flight: one computer per uncomputed prefix, fleet-wide.
+
+PR 2's :class:`~repro.sched.singleflight.SingleFlight` coalesces concurrent
+computes of one store key *within* a process; this extends the election
+across processes using the store server's lease table.  Two levels compose:
+
+  1. locally, threads coalesce exactly as before (followers receive the
+     leader's in-memory value — no store round-trip at all);
+  2. the local leader then contends for the server-side lease.  Granted →
+     it is the fleet-wide leader: it computes, stores through the normal
+     admission path, and releases the lease with a ``stored`` bit.  Denied →
+     it blocks until the remote leader releases, then simply re-runs its
+     produce function: the function's own "is it in the store?" probe now
+     finds the leader's artifact and loads it.
+
+When the remote leader did *not* store (admission gate rejected it, or the
+leader crashed — crashed leaders are auto-released by the server), waiters
+re-contend for the lease so computes happen one-at-a-time rather than as a
+thundering herd; after ``max_rounds`` unproductive waits a caller gives up
+coordinating and computes locally — progress is never hostage to the
+coordination layer.  Unlike the in-process flight, a remote leader's
+exception is *not* propagated to followers (exceptions don't cross the
+wire); followers recompute and surface their own.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from ..sched.singleflight import SingleFlight
+from .client import RemoteBackend
+
+
+class DistributedSingleFlight(SingleFlight):
+    """Per-key compute deduplication across threads *and* processes."""
+
+    def __init__(
+        self,
+        remote: RemoteBackend,
+        stored_fn: Callable[[str], bool] | None = None,
+        lease_timeout_s: float = 300.0,
+        max_rounds: int = 3,
+    ) -> None:
+        super().__init__()
+        self.remote = remote
+        # tells the leader whether its compute actually landed in the store
+        # (the admission gate may have rejected it); wired to ``store.has``
+        self.stored_fn = stored_fn
+        self.lease_timeout_s = lease_timeout_s
+        self.max_rounds = max_rounds
+        self.remote_leads = 0  # flights this process led fleet-wide
+        self.remote_waits = 0  # flights coalesced onto another process
+
+    def run(
+        self,
+        key: str,
+        fn: Callable[[], Any],
+        timeout: float | None = None,
+    ) -> tuple[Any, bool]:
+        (value, remote_leader), local_leader = super().run(
+            key, lambda: self._coordinate(key, fn), timeout
+        )
+        return value, local_leader and remote_leader
+
+    def _coordinate(self, key: str, fn: Callable[[], Any]) -> tuple[Any, bool]:
+        # already stored: no election needed — contending would serialize
+        # the fleet's *loads* behind one lease for no benefit
+        if self.stored_fn is not None and self.stored_fn(key):
+            return fn(), True
+        for _ in range(self.max_rounds):
+            grant = self.remote.lease_acquire(
+                key, wait=True, timeout_s=self.lease_timeout_s
+            )
+            if grant.granted:
+                self.remote_leads += 1
+                try:
+                    value = fn()
+                except BaseException:
+                    self.remote.lease_release(key, grant.token, stored=False)
+                    raise
+                stored = bool(self.stored_fn(key)) if self.stored_fn else False
+                self.remote.lease_release(key, grant.token, stored=stored)
+                return value, True
+            with self._lock:
+                self.remote_waits += 1
+                self.waits += 1
+            if grant.stored:
+                # the fleet leader stored it: fn's store probe loads it now
+                return fn(), False
+            # leader stored nothing (rejected/failed/timed out): contend again
+        return fn(), True  # coordination exhausted — compute unilaterally

@@ -1,0 +1,110 @@
+"""Wire protocol for the cross-process intermediate-data store.
+
+One *frame* carries one message in either direction::
+
+    +----------------+----------------+----------------+---------------+
+    | header_len: 4B | payload_len: 8B| header (JSON)  | payload bytes |
+    +----------------+----------------+----------------+---------------+
+
+Lengths are big-endian.  The header is a small JSON object (``op`` and its
+arguments on requests; ``ok`` plus result fields on responses); the payload
+is the raw blob bytes (requests: ``write_blob``/``write_meta``; responses:
+``read_blob``/``read_meta``).  Blob frames carry a ``digest`` field — the
+SHA-256 hex of the payload — verified on both ends, so a flipped bit on the
+wire (or a blob corrupted at rest) surfaces as :class:`IntegrityError`
+instead of silently poisoning a downstream module.
+
+A clean EOF *between* frames is a normal connection close
+(:class:`ConnectionClosed`); an EOF *inside* a frame is a truncated frame
+(:class:`ProtocolError`) — the distinction is what lets the client safely
+retry idempotent requests after a server restart.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import socket
+import struct
+from typing import Any
+
+_FRAME = struct.Struct(">IQ")  # header_len, payload_len
+
+MAX_HEADER_BYTES = 1 << 20  # 1 MiB of JSON is already absurd
+MAX_PAYLOAD_BYTES = 1 << 40  # sanity bound, not a quota
+
+DEFAULT_PORT = 7077
+
+
+class ProtocolError(RuntimeError):
+    """Malformed or truncated frame."""
+
+
+class ConnectionClosed(ProtocolError):
+    """Peer closed the connection at a frame boundary (normal teardown)."""
+
+
+class IntegrityError(ProtocolError):
+    """Payload bytes do not match their declared content digest."""
+
+
+class RemoteStoreError(RuntimeError):
+    """The server reported a failure executing the request."""
+
+
+def digest(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def send_frame(sock: socket.socket, header: dict[str, Any], payload: bytes = b"") -> None:
+    head = json.dumps(header, separators=(",", ":")).encode()
+    if len(head) > MAX_HEADER_BYTES:
+        raise ProtocolError(f"header too large: {len(head)} bytes")
+    # one sendall: small frames leave in a single segment
+    sock.sendall(_FRAME.pack(len(head), len(payload)) + head + payload)
+
+
+def recv_exact(sock: socket.socket, n: int, *, at_boundary: bool = False) -> bytes:
+    """Read exactly ``n`` bytes.  ``at_boundary`` marks the read that starts
+    a frame: EOF there is a clean close, EOF elsewhere a truncation."""
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if at_boundary and got == 0:
+                raise ConnectionClosed("peer closed the connection")
+            raise ProtocolError(f"truncated frame: expected {n} bytes, got {got}")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> tuple[dict[str, Any], bytes]:
+    raw = recv_exact(sock, _FRAME.size, at_boundary=True)
+    header_len, payload_len = _FRAME.unpack(raw)
+    if header_len > MAX_HEADER_BYTES or payload_len > MAX_PAYLOAD_BYTES:
+        raise ProtocolError(
+            f"frame lengths out of range: header={header_len} payload={payload_len}"
+        )
+    try:
+        header = json.loads(recv_exact(sock, header_len))
+    except json.JSONDecodeError as e:
+        raise ProtocolError(f"unparseable frame header: {e}") from e
+    if not isinstance(header, dict):
+        raise ProtocolError(f"frame header must be an object, got {type(header).__name__}")
+    payload = recv_exact(sock, payload_len) if payload_len else b""
+    return header, payload
+
+
+def parse_url(url: str) -> tuple[str, int]:
+    """``tcp://host:port`` / ``host:port`` / ``host`` -> ``(host, port)``."""
+    rest = url[len("tcp://"):] if url.startswith("tcp://") else url
+    if "/" in rest:
+        raise ValueError(f"store url must not carry a path: {url!r}")
+    host, sep, port = rest.rpartition(":")
+    if not sep:
+        return rest or "127.0.0.1", DEFAULT_PORT
+    try:
+        return host or "127.0.0.1", int(port)
+    except ValueError:
+        raise ValueError(f"bad port in store url {url!r}") from None

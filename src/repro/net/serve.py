@@ -1,0 +1,64 @@
+"""``python -m repro.net.serve`` — run a store server over a directory.
+
+Example::
+
+    python -m repro.net.serve --root /var/lib/repro-store --port 7077
+
+Clients then mount the pool with ``repro.api.Client(store_url="tcp://host:7077")``
+or ``IntermediateStore(backend=RemoteBackend("tcp://host:7077"))``.
+See ``docs/remote.md`` for the deployment sketch.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+
+from ..core.backends import LocalFSBackend, MemoryBackend, TieredBackend
+from .protocol import DEFAULT_PORT
+from .server import StoreServer
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.net.serve",
+        description="Serve a directory as a shared intermediate-data store.",
+    )
+    parser.add_argument("--root", required=True, help="artifact directory")
+    parser.add_argument(
+        "--host",
+        default="127.0.0.1",
+        help="bind address; the protocol is unauthenticated, so expose it "
+        "beyond loopback (--host 0.0.0.0) only on a trusted network",
+    )
+    parser.add_argument("--port", type=int, default=DEFAULT_PORT)
+    parser.add_argument(
+        "--hot-mb",
+        type=int,
+        default=0,
+        help="optional in-memory hot tier (MiB); 0 disables tiering",
+    )
+    args = parser.parse_args(argv)
+
+    backend = LocalFSBackend(args.root)
+    if args.hot_mb > 0:
+        backend = TieredBackend(
+            backend, MemoryBackend(), hot_capacity_bytes=args.hot_mb << 20
+        )
+    server = StoreServer(backend, host=args.host, port=args.port)
+    server.start()
+    print(f"store server listening on {server.url} (root={args.root})", flush=True)
+
+    signal.signal(signal.SIGTERM, lambda *_: server.stop())
+    signal.signal(signal.SIGINT, lambda *_: server.stop())
+    try:
+        server.wait()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

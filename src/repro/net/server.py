@@ -1,0 +1,411 @@
+"""``StoreServer`` — the intermediate-data store as a shared daemon.
+
+One server process owns a :class:`~repro.core.backends.StorageBackend` (a
+``LocalFSBackend`` in the CLI) and exposes its full contract over the framed
+TCP protocol of :mod:`repro.net.protocol`, so any number of workflow
+processes share one artifact pool — the fleet-wide denominator the gain-loss
+storing model needs (arXiv 2202.06473) and the reuse-across-workers setup
+parallel SWfMSs assume (arXiv 1303.7195).
+
+Beyond the byte ops the server provides the two pieces of *coordination*
+that cannot live client-side:
+
+  * a **lease table** — the cross-process generalization of the in-process
+    :class:`~repro.sched.singleflight.SingleFlight`: the first client to
+    ``lease_acquire`` an uncomputed store key becomes the fleet-wide leader;
+    later acquirers block until the leader releases (carrying a ``stored``
+    bit telling them whether loading or recomputing is next).  Leases held
+    by a connection are auto-released when it dies, so a crashed leader
+    never wedges the fleet.
+  * an **eviction-event stream** — every ``delete`` is broadcast to
+    subscribed clients (minus the originator), so each client's
+    ``policy.stored`` bookkeeping and read-through cache converge on the
+    same view of what still exists.
+
+Every connection is handled by its own thread (handlers mostly block on
+socket or disk I/O, where the GIL is released); per-op request counters are
+exposed via the ``stats`` op — benchmarks use them to prove cache hits never
+touch the network.
+"""
+from __future__ import annotations
+
+import itertools
+import socket
+import threading
+import time
+from typing import Any
+
+from ..core.backends import StorageBackend
+from .protocol import (
+    ConnectionClosed,
+    ProtocolError,
+    digest,
+    recv_frame,
+    send_frame,
+)
+
+_MAX_LEASE_WAIT_S = 3600.0
+
+
+class _Lease:
+    __slots__ = ("token", "client_id", "event", "stored")
+
+    def __init__(self, token: str, client_id: str) -> None:
+        self.token = token
+        self.client_id = client_id
+        self.event = threading.Event()
+        self.stored = False
+
+
+class _Conn:
+    """Per-connection server state (socket + locks + held leases)."""
+
+    def __init__(self, sock: socket.socket, peer: Any) -> None:
+        self.sock = sock
+        self.peer = peer
+        self.send_lock = threading.Lock()  # event pushes race with responses
+        self.client_id = ""
+        self.leases: set[tuple[str, str]] = set()  # (key, token)
+        self.subscriber = False
+
+    def send(
+        self, header: dict[str, Any], payload: bytes = b"", *,
+        timeout_s: float | None = None,
+    ) -> None:
+        with self.send_lock:
+            if timeout_s is not None:
+                self.sock.settimeout(timeout_s)
+            try:
+                send_frame(self.sock, header, payload)
+            finally:
+                if timeout_s is not None:
+                    self.sock.settimeout(None)
+
+
+class StoreServer:
+    """Threaded TCP daemon exposing a ``StorageBackend`` plus coordination."""
+
+    def __init__(
+        self,
+        backend: StorageBackend,
+        host: str = "127.0.0.1",
+        port: int = 0,
+    ) -> None:
+        self.backend = backend
+        self.host = host
+        self.port = port
+        self._listener: socket.socket | None = None
+        self._accept_thread: threading.Thread | None = None
+        self._stopping = threading.Event()
+        self._conns_lock = threading.Lock()
+        self._conns: set[_Conn] = set()
+        self._lease_lock = threading.Lock()
+        self._leases: dict[str, _Lease] = {}
+        self._token_counter = itertools.count(1)
+        self._counts_lock = threading.Lock()
+        self._counts: dict[str, int] = {}
+        self._started_at = time.time()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "StoreServer":
+        if self._listener is not None:
+            raise RuntimeError("server already started")
+        self._stopping.clear()
+        ls = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        ls.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        ls.bind((self.host, self.port))
+        ls.listen(128)
+        # a thread blocked in accept() holds the socket open past close()
+        # (Linux), pinning the port; a timeout lets it observe _stopping
+        ls.settimeout(0.2)
+        self.port = ls.getsockname()[1]
+        self._listener = ls
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="store-accept", daemon=True
+        )
+        self._accept_thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Close the listener and every live connection; wake lease waiters."""
+        self._stopping.set()
+        if self._listener is not None:
+            if self._accept_thread is not None:
+                self._accept_thread.join(timeout=2)  # drain a blocked accept()
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+            self._listener = None
+        with self._conns_lock:
+            conns = list(self._conns)
+        for conn in conns:
+            self._drop_conn(conn)
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5)
+            self._accept_thread = None
+
+    def wait(self) -> None:
+        """Block until :meth:`stop` is called (signal handler, other thread)."""
+        while not self._stopping.wait(0.5):
+            pass
+
+    def serve_forever(self) -> None:
+        self.start()
+        try:
+            self.wait()
+        finally:
+            self.stop()
+
+    def __enter__(self) -> "StoreServer":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    @property
+    def url(self) -> str:
+        return f"tcp://{self.host}:{self.port}"
+
+    # -- accept / per-connection loop ---------------------------------------
+    def _accept_loop(self) -> None:
+        assert self._listener is not None
+        listener = self._listener
+        while not self._stopping.is_set():
+            try:
+                sock, peer = listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:  # listener closed by stop()
+                return
+            sock.settimeout(None)  # accept()ed sockets inherit the timeout
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = _Conn(sock, peer)
+            with self._conns_lock:
+                self._conns.add(conn)
+            threading.Thread(
+                target=self._serve_conn, args=(conn,), name="store-conn", daemon=True
+            ).start()
+
+    def _drop_conn(self, conn: _Conn) -> None:
+        with self._conns_lock:
+            self._conns.discard(conn)
+        # a dead leader must not wedge its followers: auto-release with
+        # stored=False so waiters recompute (or re-elect) instead of hanging.
+        # Snapshot under the lease lock (the serve thread mutates the set
+        # under it too), release outside (the lock is not reentrant).
+        with self._lease_lock:
+            held = list(conn.leases)
+            conn.leases.clear()
+        for key, token in held:
+            self._release_lease(key, token, stored=False)
+        try:
+            conn.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+
+    def _serve_conn(self, conn: _Conn) -> None:
+        try:
+            while not self._stopping.is_set():
+                try:
+                    header, payload = recv_frame(conn.sock)
+                except ConnectionClosed:
+                    return
+                except (ProtocolError, OSError):
+                    # truncated/garbled frame: this connection's framing is
+                    # unrecoverable — drop it; other connections are unharmed
+                    return
+                try:
+                    self._dispatch(conn, header, payload)
+                except (BrokenPipeError, ConnectionResetError, OSError):
+                    return
+        finally:
+            self._drop_conn(conn)
+
+    # -- request dispatch -----------------------------------------------------
+    def _count(self, op: str) -> None:
+        with self._counts_lock:
+            self._counts[op] = self._counts.get(op, 0) + 1
+
+    def _dispatch(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        op = req.get("op", "")
+        self._count(op)
+        try:
+            handler = getattr(self, f"_op_{op}", None)
+            if handler is None:
+                conn.send({"ok": False, "error": f"unknown op {op!r}", "kind": "bad_op"})
+                return
+            handler(conn, req, payload)
+        except (KeyError, FileNotFoundError) as e:
+            conn.send({"ok": False, "error": str(e), "kind": "not_found"})
+        except (BrokenPipeError, ConnectionResetError):
+            raise
+        except Exception as e:  # noqa: BLE001 - fault isolation per request
+            conn.send({"ok": False, "error": f"{type(e).__name__}: {e}", "kind": "server"})
+
+    @staticmethod
+    def _bad_name(name: Any) -> bool:
+        """Blob/meta names are joined into filesystem paths by the backend;
+        a network client must never be able to traverse outside the root."""
+        return (
+            not isinstance(name, str)
+            or not name
+            or "/" in name
+            or "\\" in name
+            or "\x00" in name
+            or name in (".", "..")
+        )
+
+    def _check_name(self, conn: _Conn, req: dict[str, Any]) -> str | None:
+        name = req.get("name")
+        if self._bad_name(name):
+            conn.send(
+                {"ok": False, "error": f"illegal blob name {name!r}", "kind": "bad_name"}
+            )
+            return None
+        return name
+
+    # -- storage ops ----------------------------------------------------------
+    def _op_write_blob(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        name = self._check_name(conn, req)
+        if name is None:
+            return
+        want = req.get("digest")
+        if want is not None and digest(payload) != want:
+            conn.send(
+                {"ok": False, "error": "payload digest mismatch", "kind": "integrity"}
+            )
+            return
+        n = self.backend.write_blob(req["key"], name, payload)
+        conn.send({"ok": True, "nbytes": n})
+
+    def _op_read_blob(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        name = self._check_name(conn, req)
+        if name is None:
+            return
+        data = self.backend.read_blob(req["key"], name)
+        conn.send({"ok": True, "digest": digest(data)}, data)
+
+    def _op_delete(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        key = req["key"]
+        self.backend.delete(key)
+        conn.send({"ok": True})
+        self._broadcast(
+            {"event": "evicted", "key": key}, skip_client=req.get("client_id", "")
+        )
+
+    def _op_exists(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        conn.send({"ok": True, "exists": bool(self.backend.exists(req["key"]))})
+
+    def _op_write_meta(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        name = self._check_name(conn, req)
+        if name is None:
+            return
+        self.backend.write_meta(name, payload.decode())
+        conn.send({"ok": True})
+
+    def _op_read_meta(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        name = self._check_name(conn, req)
+        if name is None:
+            return
+        text = self.backend.read_meta(name)
+        if text is None:
+            conn.send({"ok": True, "none": True})
+        else:
+            conn.send({"ok": True}, text.encode())
+
+    def _op_nbytes(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        conn.send({"ok": True, "nbytes": int(self.backend.nbytes(req["key"]))})
+
+    # -- coordination ops ------------------------------------------------------
+    def _op_lease_acquire(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        key = req["key"]
+        client_id = req.get("client_id", "")
+        wait = bool(req.get("wait", True))
+        timeout = min(float(req.get("timeout", 300.0)), _MAX_LEASE_WAIT_S)
+        with self._lease_lock:
+            lease = self._leases.get(key)
+            if lease is None:
+                token = f"t{next(self._token_counter)}"
+                self._leases[key] = _Lease(token, client_id)
+                conn.leases.add((key, token))
+        if lease is None:
+            # send OUTSIDE the lease lock: a client with a full receive
+            # window must never wedge fleet-wide lease traffic
+            conn.send({"ok": True, "granted": True, "token": token})
+            return
+        if not wait:
+            conn.send({"ok": True, "granted": False, "waited": False})
+            return
+        # block this handler thread (connection-per-thread makes that safe)
+        # until the leader releases; the stored bit tells the waiter whether
+        # the artifact landed (load it) or not (become the next leader)
+        if lease.event.wait(timeout):
+            conn.send({"ok": True, "granted": False, "stored": lease.stored})
+        else:
+            conn.send({"ok": True, "granted": False, "stored": False, "timeout": True})
+
+    def _op_lease_release(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        key, token = req["key"], req.get("token", "")
+        self._release_lease(key, token, stored=bool(req.get("stored", False)))
+        with self._lease_lock:
+            conn.leases.discard((key, token))
+        # releasing an unknown/expired lease is a no-op: the client may be
+        # replaying after a reconnect that already auto-released it
+        conn.send({"ok": True})
+
+    def _release_lease(self, key: str, token: str, stored: bool) -> None:
+        with self._lease_lock:
+            lease = self._leases.get(key)
+            if lease is None or lease.token != token:
+                return
+            del self._leases[key]
+        lease.stored = stored
+        lease.event.set()
+
+    def _op_subscribe(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        conn.client_id = req.get("client_id", "")
+        conn.subscriber = True
+        conn.send({"ok": True})
+
+    def _broadcast(self, event: dict[str, Any], skip_client: str = "") -> None:
+        with self._conns_lock:
+            subs = [c for c in self._conns if c.subscriber]
+        for sub in subs:
+            if skip_client and sub.client_id == skip_client:
+                continue  # originator already handled it locally
+            try:
+                # bounded send: a subscriber that stopped draining its socket
+                # must not wedge the deleting connection (and, through its
+                # send_lock, every later broadcast) — drop it instead
+                sub.send(event, timeout_s=5.0)
+            except OSError:  # includes socket.timeout
+                self._drop_conn(sub)
+
+    # -- introspection ---------------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        with self._counts_lock:
+            counts = dict(self._counts)
+        with self._lease_lock:
+            n_leases = len(self._leases)
+        with self._conns_lock:
+            n_conns = len(self._conns)
+            n_subs = sum(1 for c in self._conns if c.subscriber)
+        return {
+            "requests": sum(counts.values()),
+            "ops": counts,
+            "active_leases": n_leases,
+            "connections": n_conns,
+            "subscribers": n_subs,
+            "uptime_s": time.time() - self._started_at,
+        }
+
+    def _op_stats(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        conn.send({"ok": True, "stats": self.stats()})
+
+    def _op_ping(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        conn.send({"ok": True, "pong": True})

@@ -18,6 +18,7 @@ See ``docs/scheduler.md`` for the execution model and thread-safety
 invariants.
 """
 from .dag import DagNode, DagWorkflow
+from .dispatch import NodeDispatcher, ProcessPoolDispatcher
 from .scheduler import DagRunResult, DagScheduler, DagWorkflowError, NodeResult
 from .singleflight import SingleFlight
 from .stats import AggregateStats
@@ -30,7 +31,9 @@ __all__ = [
     "DagScheduler",
     "DagWorkflow",
     "DagWorkflowError",
+    "NodeDispatcher",
     "NodeResult",
+    "ProcessPoolDispatcher",
     "SingleFlight",
     "WorkflowService",
 ]

@@ -37,6 +37,7 @@ from ..core.risp import StoragePolicy, StoredRecord
 from ..core.store import IntermediateStore
 from ..core.workflow import ModuleRef, ModuleSpec, PrefixKey, Workflow
 from .dag import DagWorkflow
+from .dispatch import NodeDispatcher
 from .singleflight import SingleFlight
 
 
@@ -116,7 +117,13 @@ class DagScheduler:
     admission: str = "always"  # "always" | "t1_gt_t2"
     provenance: ProvenanceLog | None = None
     cost_model: CostModel | None = None
+    # pass a DistributedSingleFlight (repro.net) to extend the election
+    # across processes sharing one remote store
     singleflight: SingleFlight = field(default_factory=SingleFlight)
+    # optional ProcessPoolDispatcher: module fns execute in worker processes
+    # (GIL escape); scheduling/store/admission stay in this process.  The
+    # dispatcher's lifecycle belongs to its creator, not to close().
+    dispatcher: NodeDispatcher | None = None
 
     def __post_init__(self) -> None:
         if not isinstance(self.registry, ModuleRegistry):
@@ -373,7 +380,12 @@ class DagScheduler:
         params = self._params_for(ref)
         t0 = time.perf_counter()
         try:
-            value = spec.fn(inp, **params)
+            if self.dispatcher is not None and self.dispatcher.accepts(
+                ref.module_id
+            ):
+                value = self.dispatcher.invoke(ref.module_id, params, inp)
+            else:
+                value = spec.fn(inp, **params)
             value = jax.block_until_ready(value)
         except DagWorkflowError:
             raise

@@ -28,7 +28,9 @@ from ..core.risp import StoragePolicy
 from ..core.store import IntermediateStore
 from ..core.workflow import ModuleSpec, Workflow
 from .dag import DagWorkflow
+from .dispatch import NodeDispatcher
 from .scheduler import DagRunResult, DagScheduler
+from .singleflight import SingleFlight
 from .stats import AggregateStats
 
 
@@ -45,6 +47,8 @@ class WorkflowService:
         provenance: ProvenanceLog | None = None,
         cost_model: CostModel | None = None,
         max_concurrent_runs: int = 32,
+        singleflight: "SingleFlight | None" = None,
+        dispatcher: "NodeDispatcher | None" = None,
     ) -> None:
         self.scheduler = DagScheduler(
             store=store,
@@ -54,6 +58,8 @@ class WorkflowService:
             admission=admission,
             provenance=provenance,
             cost_model=cost_model,
+            singleflight=singleflight if singleflight is not None else SingleFlight(),
+            dispatcher=dispatcher,
         )
         self._lock = threading.Lock()
         self._t_first: float | None = None

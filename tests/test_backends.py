@@ -153,10 +153,22 @@ def test_lru_policy_available(tmp_path):
 def test_index_survives_reopen_with_backend_meta(tmp_path):
     s1 = IntermediateStore(tmp_path / "s", codec="zlib")
     s1.put("k", jnp.arange(4), compute_seconds=0.5)
+    s1.close()  # index flushes are batched; close persists the tail
     s2 = IntermediateStore(tmp_path / "s", codec="zlib")
     assert s2.has("k")
     assert s2.records["k"].compute_s == 0.5
     np.testing.assert_array_equal(np.asarray(s2.get("k")), np.arange(4))
+
+
+def test_unflushed_artifact_adopted_on_reopen(tmp_path):
+    """Crash before an index flush must not lose the artifact: the reopened
+    store re-discovers it from the backend on first probe."""
+    s1 = IntermediateStore(tmp_path / "s", codec="zlib")
+    s1.put("k", jnp.arange(6.0))
+    # simulate a crash: no flush/close; wipe the in-memory index path
+    s2 = IntermediateStore(tmp_path / "s", codec="zlib")
+    assert s2.has("k")  # adopted from backend existence, not the index
+    np.testing.assert_array_equal(np.asarray(s2.get("k")), np.arange(6.0))
 
 
 def test_risp_executor_runs_on_memory_backend():
@@ -172,3 +184,42 @@ def test_risp_executor_runs_on_memory_backend():
     r3 = ex.run("ds", data, ["double", "double"], "w3")  # reuses
     assert r3.n_skipped >= 1
     np.testing.assert_array_equal(np.asarray(r1.output), np.asarray(r3.output))
+
+
+class _MetaCountingBackend(MemoryBackend):
+    """Counts index flushes so the O(n^2)-churn regression stays fixed."""
+
+    def __init__(self):
+        super().__init__()
+        self.meta_writes = 0
+
+    def write_meta(self, name, text):
+        self.meta_writes += 1
+        super().write_meta(name, text)
+
+
+def test_index_flush_is_batched_not_per_put():
+    """100 puts must NOT rewrite index.json 100 times (the old O(n^2) churn);
+    the dirty-flag batches flushes by count/interval and close() persists
+    the tail."""
+    backend = _MetaCountingBackend()
+    store = IntermediateStore(
+        backend=backend, codec="none", index_flush_interval_s=3600.0
+    )
+    for i in range(100):
+        store.put(f"k{i}", jnp.ones((4,)) * i)
+    # flush_every=64 default: one threshold flush, nothing per-put
+    assert backend.meta_writes <= 100 // store.index_flush_every + 1
+    store.close()
+    reopened = IntermediateStore(backend=backend, codec="none")
+    assert len(reopened.records) == 100
+    np.testing.assert_array_equal(np.asarray(reopened.get("k42")), np.full((4,), 42.0))
+
+
+def test_index_flush_interval_forces_write():
+    backend = _MetaCountingBackend()
+    store = IntermediateStore(
+        backend=backend, codec="none", index_flush_interval_s=0.0
+    )
+    store.put("a", jnp.ones((2,)))
+    assert backend.meta_writes == 1  # zero interval: every mutation flushes
