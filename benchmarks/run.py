@@ -16,6 +16,7 @@ def main() -> None:
         bench_remote_store,
         bench_risp,
         bench_serving_load,
+        bench_sharded_store,
         bench_time_gain,
         roofline,
     )
@@ -30,6 +31,7 @@ def main() -> None:
         ("dag_scheduler (Ch. 6.3.1 DAGs, concurrent runs)", bench_dag_scheduler.run),
         ("recommend (Ch. 4 recommendation surface, repro.api)", bench_recommend.run),
         ("remote_store (repro.net cross-process pool)", bench_remote_store.run),
+        ("sharded_store (repro.net cluster: shards + replication)", bench_sharded_store.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

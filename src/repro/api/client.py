@@ -54,8 +54,17 @@ class Client:
         server's eviction-event stream (keeping ``policy.stored`` and the
         cache consistent with fleet-wide evictions), and upgrades the
         scheduler's single-flight to the server's lease table so N client
-        processes compute an uncomputed prefix exactly once.  Mutually
-        exclusive with ``root``/``store``.
+        processes compute an uncomputed prefix exactly once.  A
+        comma-separated list (``"h:7077,h:7078,h:7079"``) mounts the pool in
+        **cluster mode** instead: a ``ShardedBackend`` routes every key over
+        a consistent-hash ring of the listed servers with ``replication``
+        copies, failover reads, read-repair, and ring-aware lease election
+        (see ``docs/remote.md``, "Cluster mode").  Mutually exclusive with
+        ``root``/``store``.
+    replication: replica count per artifact in cluster mode (default 2,
+        clamped to the shard count) — ``R>=2`` survives a shard death
+        mid-run with no artifact loss.  Only valid with a multi-endpoint
+        ``store_url``.
     store: pre-built store; mutually exclusive with ``root``/``capacity_bytes``
         /``eviction``/``codec``.
     policy: a ``StoragePolicy`` instance or a policy name
@@ -90,10 +99,13 @@ class Client:
         provenance: ProvenanceLog | None = None,
         cache_bytes: int = 64 * 1024 * 1024,
         client_id: str | None = None,
+        replication: int | None = None,
         dispatcher: "NodeDispatcher | None" = None,
     ) -> None:
-        self._remote: "RemoteBackend | None" = None
+        self._remote: "RemoteBackend | ShardedBackend | None" = None
         singleflight: "SingleFlight | None" = None
+        if store_url is None and replication is not None:
+            raise ValueError("replication only applies to a store_url cluster mount")
         if store_url is not None:
             if store is not None or root is not None:
                 raise ValueError(
@@ -102,9 +114,26 @@ class Client:
             # local import: repro.api stays importable without repro.net only
             # in spirit — net has no extra deps, but the seam keeps layering
             # one-directional (api -> net, never net -> api)
-            from ..net import CachingBackend, DistributedSingleFlight, RemoteBackend
+            from ..net import (
+                CachingBackend,
+                DistributedSingleFlight,
+                RemoteBackend,
+                ShardedBackend,
+            )
 
-            self._remote = RemoteBackend(store_url, client_id=client_id)
+            if "," in store_url:
+                self._remote = ShardedBackend(
+                    store_url,
+                    replication=replication if replication is not None else 2,
+                    client_id=client_id,
+                )
+            else:
+                if replication is not None:
+                    raise ValueError(
+                        "replication is a cluster-mode option; it needs a "
+                        "multi-endpoint store_url (\"h:p1,h:p2,…\")"
+                    )
+                self._remote = RemoteBackend(store_url, client_id=client_id)
             cache = CachingBackend(self._remote, capacity_bytes=cache_bytes)
             store = IntermediateStore(
                 backend=cache,
@@ -297,9 +326,11 @@ class Client:
             rec = self.policy.step(wf)
         for prefix in rec.store:
             key = prefix.key(self.policy.with_state)
-            if not self.store.has(key):
+            if self.store.has_state(key) == "absent":
                 # GIL-atomic pop without the policy lock (same pattern as the
-                # store's evict listeners; see the documented lock order)
+                # store's evict listeners; see the documented lock order).
+                # Authoritative absence only: unreachable shards are not
+                # evidence the replayed artifact never existed.
                 self.policy.stored.pop(key, None)
 
     def replay(self, corpus: Iterable[WorkflowSpec | Workflow]) -> int:

@@ -31,6 +31,17 @@ def _key_hash(key: str) -> str:
     return hashlib.sha256(key.encode()).hexdigest()[:24]
 
 
+class BackendUnavailable(RuntimeError):
+    """The backend (or every replica of a distributed one) cannot be reached.
+
+    Distinct from ``KeyError``/``FileNotFoundError``: the artifact may well
+    still exist — the bytes are just unreachable right now.  Callers above
+    the backend seam (store ``has``, scheduler load paths) treat this as
+    "not reusable at the moment" and fall back to recomputing rather than
+    failing the run or pruning records for artifacts that are still alive.
+    """
+
+
 class StorageBackend(ABC):
     """Byte-level persistence for artifact namespaces."""
 

@@ -20,6 +20,7 @@ from typing import Any, Mapping, Sequence
 
 import jax
 
+from .backends import BackendUnavailable
 from .cost import CostModel
 from .provenance import ProvenanceLog, RunRecord
 from .registry import ModuleRegistry
@@ -79,7 +80,8 @@ def probe_reusable_prefix(
     """
     while candidate is not None:
         key = candidate.key(policy.with_state)
-        if store.has(key):
+        state = store.has_state(key)
+        if state == "present":
             t0 = time.perf_counter()
             try:
                 value = store.get(key)
@@ -87,9 +89,16 @@ def probe_reusable_prefix(
                 policy.stored.pop(key, None)
                 candidate = candidate.parent()
                 continue
+            except BackendUnavailable:
+                # shard(s) holding it died between has() and get(): the bytes
+                # may survive, so keep bookkeeping and try a shorter prefix
+                candidate = candidate.parent()
+                continue
             return candidate, value, time.perf_counter() - t0
-        # artifact evicted: drop stale bookkeeping, try shorter prefix
-        if key not in keep:
+        # artifact evicted: drop stale bookkeeping, try shorter prefix —
+        # but only on authoritative absence; an unreachable artifact keeps
+        # its bookkeeping (the bytes are still out there)
+        if state == "absent" and key not in keep:
             policy.stored.pop(key, None)
         candidate = candidate.parent()
     return None, None, 0.0
@@ -253,9 +262,12 @@ class WorkflowExecutor:
             if depth not in stage_values:
                 # inside the skipped prefix: normally stored by an earlier run,
                 # but a budget eviction may have dropped it while a deeper
-                # prefix survived — don't let the policy believe it exists
-                if not self.store.has(prefix.key(self.policy.with_state)):
-                    self.policy.stored.pop(prefix.key(self.policy.with_state), None)
+                # prefix survived — don't let the policy believe it exists.
+                # Authoritative absence only: unreachable shards are not
+                # evidence of eviction (see has_state)
+                key = prefix.key(self.policy.with_state)
+                if self.store.has_state(key) == "absent":
+                    self.policy.stored.pop(key, None)
                 continue
             key, dt = admit_and_store(
                 self.store,
@@ -315,7 +327,13 @@ class WorkflowExecutor:
         if depth in stage_values:
             prefix = wf.prefix(depth)
             key = prefix.key(self.policy.with_state)
-            if not self.store.has(key):
+            state = self.store.has_state(key)
+            if state == "unreachable":
+                # the pool is gone: a put would fail (masking the module
+                # error being recovered), and claiming the prefix as stored
+                # without bytes anywhere would be a phantom — skip both
+                return
+            if state == "absent":
                 self.store.put(key, stage_values[depth])
             self.policy.stored.setdefault(
                 key, StoredRecord(prefix, self.policy.n_pipelines)

@@ -32,7 +32,7 @@ import numpy as np
 
 import jax
 
-from .backends import LocalFSBackend, StorageBackend
+from .backends import BackendUnavailable, LocalFSBackend, StorageBackend
 from .codecs import Codec, resolve_codec
 from .eviction import EvictionContext, EvictionManager
 
@@ -179,10 +179,28 @@ class IntermediateStore:
 
     # -- helpers -------------------------------------------------------------
     def has(self, key: str) -> bool:
+        """True iff ``key`` is loadable right now (collapses ``unreachable``
+        to False — use :meth:`has_state` where the difference matters)."""
+        return self.has_state(key) == "present"
+
+    def has_state(self, key: str) -> str:
+        """``"present"`` | ``"absent"`` | ``"unreachable"``.
+
+        ``absent`` is authoritative (every replica was reachable and the
+        artifact is gone — callers may prune bookkeeping); ``unreachable``
+        means the pool, or every replica of this key in a sharded pool,
+        cannot be reached: *not reusable right now*, but NOT gone — neither
+        the record nor any policy bookkeeping should be dropped, and
+        accounting converges when the pool returns.
+        """
         with self._lock:
+            try:
+                alive = self.backend.exists(key)
+            except BackendUnavailable:
+                return "unreachable"
             if key in self.records:
-                if self.backend.exists(key):
-                    return True
+                if alive:
+                    return "present"
                 # phantom record: the artifact vanished without us hearing
                 # (evicted fleet-wide before we connected, crashed writer,
                 # stale shared index).  Prune it so budget accounting never
@@ -193,13 +211,13 @@ class IntermediateStore:
                 self._mutations_since_flush += 1
                 for fn in self._evict_listeners:
                     fn(key)
-                return False
+                return "absent"
             # a sibling process sharing this backend (remote store) may have
             # persisted the artifact after our index snapshot: adopt it
-            if self.backend.exists(key):
+            if alive:
                 self._adopt_record(key)
-                return True
-            return False
+                return "present"
+            return "absent"
 
     def _shared_index(self) -> dict[str, Any]:
         """The pool's ``index.json``, parsed, cached for one flush interval —
@@ -210,7 +228,10 @@ class IntermediateStore:
         if cached is not None and now - cached[0] < max(self.index_flush_interval_s, 1.0):
             return cached[1]
         parsed: dict[str, Any] = {}
-        raw = self.backend.read_meta("index.json")
+        try:
+            raw = self.backend.read_meta("index.json")
+        except BackendUnavailable:
+            raw = None  # stats cache unreachable: synthesize records instead
         if raw:
             try:
                 parsed = json.loads(raw)
@@ -232,7 +253,7 @@ class IntermediateStore:
             return
         try:
             nb = int(self.backend.nbytes(key))
-        except NotImplementedError:
+        except (NotImplementedError, BackendUnavailable):
             nb = 0
         self.records[key] = ArtifactRecord(key, nbytes_raw=nb, nbytes_disk=nb, save_s=0.0)
 
@@ -442,6 +463,9 @@ class IntermediateStore:
         rec = self.records[key]
         rec.load_s = dt
         rec.n_loads += 1
+        # deliberately wall-clock (unlike deadline math elsewhere): record
+        # timestamps are persisted in index.json and compared across
+        # processes/restarts, where monotonic readings are meaningless
         rec.last_used_at = time.time()
         # hit statistics drive eviction ranking, so they should survive
         # restarts of read-only sessions; the batched-flush thresholds bound

@@ -9,10 +9,15 @@ Everything below the ``StorageBackend`` seam can live in another process:
   * :class:`CachingBackend`  — bounded, digest-validated read-through LRU so
     hot prefixes are served at local speed;
   * :class:`DistributedSingleFlight` — two-level (threads, then processes)
-    compute deduplication for uncomputed prefixes.
+    compute deduplication for uncomputed prefixes;
+  * :class:`ShardedBackend` + :class:`HashRing` — **cluster mode**: N servers
+    behind one consistent-hash ring with replication factor R, failover
+    reads, read-repair, and ring-aware lease election
+    (``Client(store_url="h:7077,h:7078,h:7079", replication=2)``).
 
-``python -m repro.net.serve --root DIR`` starts a server; see
-``docs/remote.md`` for the protocol and deployment sketch.
+``python -m repro.net.serve --root DIR`` starts one server (one shard); see
+``docs/remote.md`` for the protocol, cluster semantics, and deployment
+sketch.
 """
 from .cache import CachingBackend
 from .client import LeaseGrant, RemoteBackend
@@ -22,17 +27,23 @@ from .protocol import (
     IntegrityError,
     ProtocolError,
     RemoteStoreError,
+    StoreUnreachable,
 )
+from .ring import HashRing
 from .server import StoreServer
+from .sharded import ShardedBackend
 
 __all__ = [
     "CachingBackend",
     "ConnectionClosed",
     "DistributedSingleFlight",
+    "HashRing",
     "IntegrityError",
     "LeaseGrant",
     "ProtocolError",
     "RemoteBackend",
     "RemoteStoreError",
+    "ShardedBackend",
     "StoreServer",
+    "StoreUnreachable",
 ]

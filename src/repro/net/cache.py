@@ -1,12 +1,26 @@
 """Read-through blob cache: hot prefixes at local speed, shared pool behind.
 
 ``CachingBackend`` wraps any :class:`~repro.core.backends.StorageBackend`
-(in practice a :class:`~repro.net.client.RemoteBackend`) with a bounded,
-digest-validated LRU over individual blobs.  The workflow access pattern
-it exploits is extremely cache-friendly: a reused prefix is *immutable* —
-its content-addressed key never changes meaning — so a blob fetched once
-can be served locally forever, and the only invalidation that exists is
+(in practice a :class:`~repro.net.client.RemoteBackend` or a
+:class:`~repro.net.sharded.ShardedBackend`) with a bounded, digest-validated
+LRU over individual blobs.  The workflow access pattern it exploits is
+extremely cache-friendly: a reused prefix is *immutable* — its
+content-addressed key never changes meaning — so a blob fetched once can be
+served locally forever, and the only invalidation that exists is
 whole-artifact eviction, delivered by the server's event stream.
+
+Two pieces of bookkeeping keep that invalidation correct and cheap:
+
+  * an **invalidation generation** per key — the inner fetch on a miss (and
+    the inner write on a put) runs *outside* the lock, so an eviction event
+    can land in between; inserting the stale bytes afterwards would
+    resurrect a dead blob.  Each ``invalidate``/``delete`` bumps the key's
+    generation; an insert only lands if the generation it captured before
+    going to the network is still current.
+  * a **key -> blob-names index** — eviction events arrive one *key* at a
+    time, but the LRU is keyed by ``(key, name)``.  The index makes
+    ``invalidate`` O(blobs-of-key) instead of a full O(cache) scan per
+    event, which matters under a busy fleet-wide eviction stream.
 
 Every cached entry keeps the SHA-256 of its bytes and is re-verified on
 hit; a corrupted entry silently falls back to a fresh fetch.  ``exists``/
@@ -37,13 +51,27 @@ class CachingBackend(StorageBackend):
         self.capacity_bytes = capacity_bytes
         self._lock = threading.Lock()
         self._blobs: OrderedDict[tuple[str, str], tuple[bytes, str]] = OrderedDict()
+        self._names: dict[str, set[str]] = {}  # key -> cached blob names
+        # invalidation fencing: _gen[key] exists only while an invalidation
+        # raced an in-flight fetch of that key; _inflight counts the fetches.
+        # Both dicts are bounded by current fetch concurrency, not by the
+        # eviction-event volume.
+        self._gen: dict[str, int] = {}  # key -> invalidation generation
+        self._inflight: dict[str, int] = {}  # key -> fetches on the wire
         self._nbytes = 0
         self.hits = 0
         self.misses = 0
         self.validation_failures = 0
+        self.stale_inserts_dropped = 0  # fetches outrun by an invalidation
+        self.purge_examined = 0  # entries looked at by invalidations (O() proof)
 
     # -- cache bookkeeping (callers hold the lock) ---------------------------
-    def _insert(self, key: str, name: str, data: bytes) -> None:
+    def _insert(self, key: str, name: str, data: bytes, gen: int) -> None:
+        if self._gen.get(key, 0) != gen:
+            # an eviction event landed while the bytes were in flight:
+            # inserting now would resurrect a dead blob
+            self.stale_inserts_dropped += 1
+            return
         if len(data) > self.capacity_bytes:
             return
         ck = (key, name)
@@ -51,18 +79,60 @@ class CachingBackend(StorageBackend):
         if prev is not None:
             self._nbytes -= len(prev[0])
         self._blobs[ck] = (data, digest(data))
+        self._names.setdefault(key, set()).add(name)
         self._nbytes += len(data)
         while self._nbytes > self.capacity_bytes and self._blobs:
-            _, (old, _d) = self._blobs.popitem(last=False)
-            self._nbytes -= len(old)
+            okey, oname = next(iter(self._blobs))
+            self._drop_entry(okey, oname)
+
+    def _drop_entry(self, key: str, name: str) -> None:
+        """Remove one blob from the LRU + byte accounting + name index —
+        the single place the three structures' invariant is maintained.
+        Callers hold the lock."""
+        entry = self._blobs.pop((key, name), None)
+        if entry is not None:
+            self._nbytes -= len(entry[0])
+        names = self._names.get(key)
+        if names is not None:
+            names.discard(name)
+            if not names:
+                del self._names[key]
+
+    def _fetch_begin(self, key: str) -> int:
+        """Register an about-to-go-on-the-wire fetch; returns the generation
+        an eventual insert must still match.  Callers hold the lock."""
+        self._inflight[key] = self._inflight.get(key, 0) + 1
+        return self._gen.get(key, 0)
+
+    def _fetch_end(self, key: str, name: str, data: bytes | None, gen: int) -> None:
+        """Complete a fetch: insert (if it produced bytes and no invalidation
+        outran it) and retire the fence once the last fetch lands."""
+        with self._lock:
+            if data is not None:
+                self._insert(key, name, data, gen)
+            n = self._inflight.get(key, 0) - 1
+            if n <= 0:
+                self._inflight.pop(key, None)
+                self._gen.pop(key, None)  # no fetch left that could race it
+            else:
+                self._inflight[key] = n
 
     def _purge(self, key: str) -> None:
-        for ck in [ck for ck in self._blobs if ck[0] == key]:
-            data, _ = self._blobs.pop(ck)
-            self._nbytes -= len(data)
+        """Drop every cached blob of ``key`` via the name index —
+        O(blobs-of-key), never a scan of the whole LRU."""
+        if key in self._inflight:
+            # fence the racing fetch(es): their eventual insert must lose
+            self._gen[key] = self._gen.get(key, 0) + 1
+        names = self._names.pop(key, None)
+        if not names:
+            return
+        for name in names:
+            self.purge_examined += 1
+            self._drop_entry(key, name)
 
     def invalidate(self, key: str) -> None:
-        """Drop every cached blob of ``key`` (wired to eviction events)."""
+        """Drop every cached blob of ``key`` (wired to eviction events) and
+        fence out any in-flight fetch of its stale bytes."""
         with self._lock:
             self._purge(key)
 
@@ -73,9 +143,14 @@ class CachingBackend(StorageBackend):
 
     # -- StorageBackend --------------------------------------------------------
     def write_blob(self, key: str, name: str, data: bytes) -> int:
-        n = self.inner.write_blob(key, name, data)
         with self._lock:
-            self._insert(key, name, data)
+            gen = self._fetch_begin(key)
+        ok = False
+        try:
+            n = self.inner.write_blob(key, name, data)
+            ok = True
+        finally:
+            self._fetch_end(key, name, data if ok else None, gen)
         return n
 
     def read_blob(self, key: str, name: str) -> bytes:
@@ -96,19 +171,23 @@ class CachingBackend(StorageBackend):
                 self.validation_failures += 1
                 cur = self._blobs.get((key, name))
                 if cur is not None and cur[0] is data:
-                    self._blobs.pop((key, name))
-                    self._nbytes -= len(data)
+                    self._drop_entry(key, name)
         with self._lock:
             self.misses += 1
-        data = self.inner.read_blob(key, name)
-        with self._lock:
-            self._insert(key, name, data)
+            gen = self._fetch_begin(key)
+        data = None
+        try:
+            data = self.inner.read_blob(key, name)
+        finally:
+            self._fetch_end(key, name, data, gen)
         return data
 
     def delete(self, key: str) -> None:
+        with self._lock:
+            self._purge(key)  # fence in-flight fetches BEFORE the delete…
         self.inner.delete(key)
         with self._lock:
-            self._purge(key)
+            self._purge(key)  # …and drop anything that slipped in since
 
     def exists(self, key: str) -> bool:
         return self.inner.exists(key)

@@ -35,6 +35,7 @@ from .protocol import (
     IntegrityError,
     ProtocolError,
     RemoteStoreError,
+    StoreUnreachable,
     digest,
     parse_url,
     recv_frame,
@@ -156,7 +157,8 @@ class RemoteBackend(StorageBackend):
             except OSError as e:  # server down/restarting: back off and redial
                 last = e
                 self.reconnects += 1
-                time.sleep(self.retry_backoff_s * (2**attempt))
+                if attempt < self.retries:  # no pointless sleep before raising
+                    time.sleep(self.retry_backoff_s * (2**attempt))
                 continue
             try:
                 if timeout_s is not None:
@@ -177,10 +179,11 @@ class RemoteBackend(StorageBackend):
                         pass
                 last = e
                 self.reconnects += 1
-                time.sleep(self.retry_backoff_s * (2**attempt))
+                if attempt < self.retries:  # no pointless sleep before raising
+                    time.sleep(self.retry_backoff_s * (2**attempt))
                 continue
             return resp, data, sock
-        raise RemoteStoreError(
+        raise StoreUnreachable(
             f"store server {self.host}:{self.port} unreachable after "
             f"{self.retries + 1} attempts: {last}"
         ) from last

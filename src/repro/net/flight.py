@@ -2,32 +2,59 @@
 
 PR 2's :class:`~repro.sched.singleflight.SingleFlight` coalesces concurrent
 computes of one store key *within* a process; this extends the election
-across processes using the store server's lease table.  Two levels compose:
+across processes using the store service's lease table.  Two levels compose:
 
   1. locally, threads coalesce exactly as before (followers receive the
      leader's in-memory value — no store round-trip at all);
-  2. the local leader then contends for the server-side lease.  Granted →
+  2. the local leader then contends for the service-side lease.  Granted →
      it is the fleet-wide leader: it computes, stores through the normal
      admission path, and releases the lease with a ``stored`` bit.  Denied →
      it blocks until the remote leader releases, then simply re-runs its
      produce function: the function's own "is it in the store?" probe now
      finds the leader's artifact and loads it.
 
+The lease provider is anything with the ``lease_acquire``/``lease_release``
+surface — a single :class:`~repro.net.client.RemoteBackend`, or a
+:class:`~repro.net.sharded.ShardedBackend` that routes the election to the
+key's ring primary and falls over along the ring when that shard dies:
+waiters whose blocked acquire dies with the shard re-contend and re-elect
+on the next live node, so exactly-once stem election survives a shard death
+mid-run (the per-round store probe below is what squeezes out the rare
+double-compute window a mid-election death opens).
+
 When the remote leader did *not* store (admission gate rejected it, or the
 leader crashed — crashed leaders are auto-released by the server), waiters
 re-contend for the lease so computes happen one-at-a-time rather than as a
 thundering herd; after ``max_rounds`` unproductive waits a caller gives up
 coordinating and computes locally — progress is never hostage to the
-coordination layer.  Unlike the in-process flight, a remote leader's
-exception is *not* propagated to followers (exceptions don't cross the
-wire); followers recompute and surface their own.
+coordination layer.  The same applies when the lease service itself is
+unreachable (every shard down): the flight degrades to an uncoordinated
+local compute instead of failing the run.  Unlike the in-process flight, a
+remote leader's exception is *not* propagated to followers (exceptions
+don't cross the wire); followers recompute and surface their own.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Protocol, runtime_checkable
 
+from ..core.backends import BackendUnavailable
 from ..sched.singleflight import SingleFlight
-from .client import RemoteBackend
+from .client import LeaseGrant
+
+
+@runtime_checkable
+class LeaseProvider(Protocol):
+    """What the flight needs from the coordination layer: per-key leases.
+
+    Satisfied by ``RemoteBackend`` (one server's lease table) and
+    ``ShardedBackend`` (ring-primary election with failover).
+    """
+
+    def lease_acquire(
+        self, key: str, *, wait: bool = True, timeout_s: float = 300.0
+    ) -> LeaseGrant: ...
+
+    def lease_release(self, key: str, token: str, *, stored: bool) -> None: ...
 
 
 class DistributedSingleFlight(SingleFlight):
@@ -35,7 +62,7 @@ class DistributedSingleFlight(SingleFlight):
 
     def __init__(
         self,
-        remote: RemoteBackend,
+        remote: LeaseProvider,
         stored_fn: Callable[[str], bool] | None = None,
         lease_timeout_s: float = 300.0,
         max_rounds: int = 3,
@@ -49,6 +76,17 @@ class DistributedSingleFlight(SingleFlight):
         self.max_rounds = max_rounds
         self.remote_leads = 0  # flights this process led fleet-wide
         self.remote_waits = 0  # flights coalesced onto another process
+        self.uncoordinated = 0  # flights run without a reachable lease service
+
+    def _stored(self, key: str) -> bool:
+        if self.stored_fn is None:
+            return False
+        try:
+            return bool(self.stored_fn(key))
+        except BackendUnavailable:
+            # presence undecidable (replicas down): treat as not stored —
+            # worst case is a redundant compute, never a lost artifact
+            return False
 
     def run(
         self,
@@ -64,21 +102,33 @@ class DistributedSingleFlight(SingleFlight):
     def _coordinate(self, key: str, fn: Callable[[], Any]) -> tuple[Any, bool]:
         # already stored: no election needed — contending would serialize
         # the fleet's *loads* behind one lease for no benefit
-        if self.stored_fn is not None and self.stored_fn(key):
+        if self._stored(key):
             return fn(), True
-        for _ in range(self.max_rounds):
-            grant = self.remote.lease_acquire(
-                key, wait=True, timeout_s=self.lease_timeout_s
-            )
+        for round_no in range(self.max_rounds):
+            if round_no and self._stored(key):
+                # the previous leader stored it but its release got lost with
+                # a dying shard (stored bit never reached us): load, don't
+                # recompute — this probe is what keeps election exactly-once
+                # across a mid-run shard death
+                return fn(), False
+            try:
+                grant = self.remote.lease_acquire(
+                    key, wait=True, timeout_s=self.lease_timeout_s
+                )
+            except BackendUnavailable:
+                # the whole coordination layer is unreachable: compute
+                # locally rather than wedging the run on it
+                with self._lock:
+                    self.uncoordinated += 1
+                return fn(), True
             if grant.granted:
                 self.remote_leads += 1
                 try:
                     value = fn()
                 except BaseException:
-                    self.remote.lease_release(key, grant.token, stored=False)
+                    self._release(key, grant.token, stored=False)
                     raise
-                stored = bool(self.stored_fn(key)) if self.stored_fn else False
-                self.remote.lease_release(key, grant.token, stored=stored)
+                self._release(key, grant.token, stored=self._stored(key))
                 return value, True
             with self._lock:
                 self.remote_waits += 1
@@ -88,3 +138,11 @@ class DistributedSingleFlight(SingleFlight):
                 return fn(), False
             # leader stored nothing (rejected/failed/timed out): contend again
         return fn(), True  # coordination exhausted — compute unilaterally
+
+    def _release(self, key: str, token: str, *, stored: bool) -> None:
+        try:
+            self.remote.lease_release(key, token, stored=stored)
+        except BackendUnavailable:
+            # the granting shard died holding the lease: its death already
+            # auto-released every lease it held, so waiters are not wedged
+            pass

@@ -27,6 +27,8 @@ import socket
 import struct
 from typing import Any
 
+from ..core.backends import BackendUnavailable
+
 _FRAME = struct.Struct(">IQ")  # header_len, payload_len
 
 MAX_HEADER_BYTES = 1 << 20  # 1 MiB of JSON is already absurd
@@ -48,7 +50,17 @@ class IntegrityError(ProtocolError):
 
 
 class RemoteStoreError(RuntimeError):
-    """The server reported a failure executing the request."""
+    """The store service failed a request (server-reported or transport)."""
+
+
+class StoreUnreachable(RemoteStoreError, BackendUnavailable):
+    """No server — or, in cluster mode, no replica of the key — could be
+    reached at all.  Distinct from a server-*reported* failure (a reachable
+    shard rejecting a bad request or hitting a disk error must not be
+    treated as dead).  Subclasses
+    :class:`~repro.core.backends.BackendUnavailable` so layers above the
+    backend seam (store, scheduler) can degrade to recompute without
+    importing ``repro.net``."""
 
 
 def digest(data: bytes) -> str:
@@ -108,3 +120,19 @@ def parse_url(url: str) -> tuple[str, int]:
         return host or "127.0.0.1", int(port)
     except ValueError:
         raise ValueError(f"bad port in store url {url!r}") from None
+
+
+def parse_urls(url: str) -> list[tuple[str, int]]:
+    """Comma-separated cluster membership -> ordered ``(host, port)`` list.
+
+    ``"tcp://h:7077,h:7078,other:7077"`` — the scheme prefix may appear on
+    any (or no) member.  Order is irrelevant to routing (the hash ring sorts
+    members canonically) but duplicates are rejected: a member listed twice
+    would silently halve its effective replication.
+    """
+    endpoints = [parse_url(part.strip()) for part in url.split(",") if part.strip()]
+    if not endpoints:
+        raise ValueError(f"no endpoints in store url {url!r}")
+    if len(set(endpoints)) != len(endpoints):
+        raise ValueError(f"duplicate endpoints in store url {url!r}")
+    return endpoints

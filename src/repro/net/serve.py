@@ -6,7 +6,12 @@ Example::
 
 Clients then mount the pool with ``repro.api.Client(store_url="tcp://host:7077")``
 or ``IntermediateStore(backend=RemoteBackend("tcp://host:7077"))``.
-See ``docs/remote.md`` for the deployment sketch.
+
+A *cluster* is simply N of these processes, each over its **own** root
+directory (never a shared one — a shard owns its bytes), mounted together:
+``Client(store_url="h:7077,h:7078,h:7079", replication=2)``.  Routing,
+replication, and failover are entirely client-side (see ``docs/remote.md``,
+"Cluster mode"); the servers need not know about each other.
 """
 from __future__ import annotations
 

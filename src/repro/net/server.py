@@ -104,7 +104,10 @@ class StoreServer:
         self._token_counter = itertools.count(1)
         self._counts_lock = threading.Lock()
         self._counts: dict[str, int] = {}
-        self._started_at = time.time()
+        # monotonic, not wall: uptime and every lease-wait deadline in this
+        # process must be immune to NTP steps — a wall-clock jump must never
+        # expire (or extend) a lease or report negative uptime
+        self._started_at = time.monotonic()
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "StoreServer":
@@ -343,7 +346,9 @@ class StoreServer:
             return
         # block this handler thread (connection-per-thread makes that safe)
         # until the leader releases; the stored bit tells the waiter whether
-        # the artifact landed (load it) or not (become the next leader)
+        # the artifact landed (load it) or not (become the next leader).
+        # Event.wait computes its deadline from the monotonic clock, so an
+        # NTP step can neither cut a lease wait short nor stretch it.
         if lease.event.wait(timeout):
             conn.send({"ok": True, "granted": False, "stored": lease.stored})
         else:
@@ -401,7 +406,7 @@ class StoreServer:
             "active_leases": n_leases,
             "connections": n_conns,
             "subscribers": n_subs,
-            "uptime_s": time.time() - self._started_at,
+            "uptime_s": time.monotonic() - self._started_at,
         }
 
     def _op_stats(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:

@@ -29,6 +29,7 @@ from typing import Any
 
 import jax
 
+from ..core.backends import BackendUnavailable
 from ..core.cost import CostModel
 from ..core.executor import _nbytes, admit_and_store
 from ..core.provenance import ProvenanceLog, RunRecord
@@ -190,7 +191,9 @@ class DagScheduler:
             if key in chain_keys:
                 with self._pending_lock:
                     self._pending_stores.add(key)
-            elif not self.store.has(key):
+            elif self.store.has_state(key) == "absent":
+                # authoritative absence only: an unreachable artifact keeps
+                # its bookkeeping (shard death is not eviction)
                 self.policy.stored.pop(key, None)
 
         loadable = {
@@ -360,6 +363,11 @@ class DagScheduler:
                 value = self.store.get(key)
             except KeyError:  # evicted between has() and get()
                 self.policy.stored.pop(key, None)
+            except BackendUnavailable:
+                # the artifact's shard(s) died between has() and get(): the
+                # bytes may still exist, so keep all bookkeeping and simply
+                # recompute this chain inline — same fallback as eviction
+                pass
             else:
                 with self._pending_lock:  # store request satisfied by the load
                     self._pending_stores.discard(key)
@@ -435,7 +443,13 @@ class DagScheduler:
             if prefix is None or value is None:
                 continue
             key = prefix.key(self.policy.with_state)
-            if not self.store.has(key):
+            state = self.store.has_state(key)
+            if state == "unreachable":
+                # pool gone: a put would fail (masking the node error being
+                # recovered), and claiming the prefix as stored without
+                # bytes anywhere would be a phantom — skip both
+                continue
+            if state == "absent":
                 self.store.put(key, value)
             self.policy.stored.setdefault(
                 key, StoredRecord(prefix, self.policy.n_pipelines)

@@ -132,6 +132,118 @@ def test_cache_bounded_lru():
     assert cache.read_blob("k0", "b") == b"\x00" * 300
 
 
+class _GatedBackend(MemoryBackend):
+    """Inner backend whose fetch blocks until the test releases it — lets a
+    test interleave an eviction event with an in-flight miss."""
+
+    def __init__(self):
+        super().__init__()
+        self.entered = threading.Event()
+        self.gate = threading.Event()
+
+    def read_blob(self, key, name):
+        self.entered.set()
+        assert self.gate.wait(5), "test never released the gated fetch"
+        return super().read_blob(key, name)
+
+
+def test_cache_miss_insert_fenced_by_invalidation():
+    """Regression (ISSUE 5 satellite): an eviction event landing between the
+    inner fetch and the re-insert must not resurrect the dead blob."""
+    inner = _GatedBackend()
+    inner._objects["k"] = {"b": b"stale-bytes"}
+    cache = CachingBackend(inner)
+    out = {}
+
+    def miss():
+        out["data"] = cache.read_blob("k", "b")
+
+    t = threading.Thread(target=miss)
+    t.start()
+    assert inner.entered.wait(5)
+    # the event thread delivers the eviction while the fetch is in flight
+    cache.invalidate("k")
+    inner.gate.set()
+    t.join(timeout=5)
+    assert out["data"] == b"stale-bytes"  # the caller still gets its bytes…
+    assert cache.stale_inserts_dropped == 1  # …but the corpse stays buried
+    assert cache.cached_bytes == 0
+    # the fence retires with the fetch: bookkeeping stays bounded by
+    # in-flight concurrency, not by eviction-event volume
+    assert not cache._gen and not cache._inflight
+    # and a later miss (no interleaving) caches normally again
+    inner.entered.clear()
+    inner.gate.set()
+    cache.read_blob("k", "b")
+    assert cache.cached_bytes == len(b"stale-bytes")
+
+
+def test_cache_invalidation_of_uncached_keys_leaves_no_state():
+    """A busy fleet-wide eviction stream of keys this client never cached
+    must not grow any cache bookkeeping."""
+    cache = CachingBackend(MemoryBackend())
+    for i in range(500):
+        cache.invalidate(f"never-seen-{i}")
+    assert not cache._gen and not cache._inflight and not cache._names
+    assert cache.cached_bytes == 0
+
+
+class _GatedWriteBackend(MemoryBackend):
+    """Inner backend whose write blocks until released (write-path twin of
+    :class:`_GatedBackend`)."""
+
+    def __init__(self):
+        super().__init__()
+        self.entered = threading.Event()
+        self.gate = threading.Event()
+
+    def write_blob(self, key, name, data):
+        self.entered.set()
+        assert self.gate.wait(5), "test never released the gated write"
+        return super().write_blob(key, name, data)
+
+
+def test_cache_write_insert_fenced_by_invalidation():
+    """Same fence on the write-through path: an eviction event landing
+    during the inner write must beat the subsequent cache insert."""
+    inner = _GatedWriteBackend()
+    cache = CachingBackend(inner)
+    t = threading.Thread(target=cache.write_blob, args=("k", "b", b"v1"))
+    t.start()
+    assert inner.entered.wait(5)
+    cache.invalidate("k")  # event for the key's previous incarnation
+    inner.gate.set()
+    t.join(timeout=5)
+    assert cache.stale_inserts_dropped == 1
+    assert cache.cached_bytes == 0  # conservative: a missed fill, never stale
+    assert inner.read_blob("k", "b") == b"v1"  # the write itself landed
+    # a write after the dust settles caches normally
+    cache.write_blob("k", "b", b"v2")
+    assert cache.cached_bytes == 2
+
+
+def test_cache_purge_uses_index_not_full_scan():
+    """Regression (ISSUE 5 satellite): invalidation cost is O(blobs-of-key),
+    not O(whole cache) — asserted via the examined-entries counter."""
+    inner = MemoryBackend()
+    cache = CachingBackend(inner)
+    n_keys, blobs_per_key = 200, 2
+    for i in range(n_keys):
+        for j in range(blobs_per_key):
+            cache.write_blob(f"k{i}", f"b{j}", b"x" * 8)
+    assert cache.purge_examined == 0  # inserts never scan
+    cache.invalidate("k7")
+    assert cache.purge_examined == blobs_per_key, (
+        f"invalidate examined {cache.purge_examined} entries; a full scan "
+        f"would touch {n_keys * blobs_per_key}"
+    )
+    assert cache.read_blob("k7", "b0") == b"x" * 8  # refetch works
+    # invalidating an uncached key examines nothing
+    before = cache.purge_examined
+    cache.invalidate("never-cached")
+    assert cache.purge_examined == before
+
+
 def test_eviction_event_stream(server):
     rb1, rb2 = _fast_backend(server.url), _fast_backend(server.url)
     try:
