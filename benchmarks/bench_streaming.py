@@ -1,0 +1,279 @@
+"""Streaming data plane: wire v2 (chunked + batch) vs the one-shot v1 path.
+
+Three acceptance claims (ISSUE 6), each asserted here rather than eyeballed:
+
+  * **throughput** — at the largest blob size, chunked GET serves >= 2x the
+    bytes per second of server CPU than the one-shot path (measured from
+    ``/proc/<pid>/stat`` of a subprocess server).  Server CPU per byte is
+    what bounds a shared store server's aggregate capacity, and the win is
+    structural: one-shot reads materialize the blob, hash it on the request
+    path, and copy it through userspace; chunked reads with a known digest
+    sidecar go straight from the backend file to the socket via
+    ``os.sendfile`` — the *client's* incremental fold is the single
+    end-to-end integrity pass.  Single-client wall-clock speedup is also
+    reported; on few-core hosts it is bounded below 2x by the client's own
+    verify fold, which is why the capacity metric carries the assert.
+  * **constant server memory** — the server's peak RSS (VmHWM) stays
+    roughly flat as streamed blob sizes grow (bounded chunk buffers +
+    spill-to-disk), while the one-shot server's peak tracks the largest
+    blob it ever materialized.  Separate server processes per mode: VmHWM
+    is monotonic by design.
+  * **probe-walk round trips** — a depth-8 reuse-probe walk issues exactly
+    ONE batched presence request (was one per chain link), asserted against
+    the server's op counters.
+
+``--smoke`` (CI): small blobs plus a torn-stream canary — a client killed
+mid-chunked-put must leave no partial artifact and no spill file.
+"""
+from __future__ import annotations
+
+import os
+import re
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import IntermediateStore, TSAR
+from repro.core.backends import LocalFSBackend
+from repro.core.executor import probe_reusable_prefix
+from repro.core.workflow import ModuleRef, PrefixKey
+from repro.net import RemoteBackend, StoreServer
+from repro.net import protocol as P
+
+_SERVER_START_TIMEOUT_S = 60
+
+
+# -- helpers ------------------------------------------------------------------
+def _client(url: str, mode: str) -> RemoteBackend:
+    """``streamed`` = wire v2 (chunk everything past 64 KiB); ``oneshot`` =
+    the v1 wire (client pinned to proto 1, so not even ``accept_chunked``
+    rides on reads — byte-identical to the pre-v2 exchange)."""
+    rb = RemoteBackend(
+        url, retries=2, retry_backoff_s=0.05, stream_threshold=1 << 16
+    )
+    if mode == "oneshot":
+        rb._server_proto = 1
+    return rb
+
+
+def _best_of(fn, reps: int) -> float:
+    """Best-of-``reps`` wall time — throughput claims should not be decided
+    by one scheduler hiccup on a shared CI box."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _spawn_server(root: str) -> tuple[subprocess.Popen, str]:
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.net.serve", "--root", root, "--port", "0"],
+        stdout=subprocess.PIPE,
+        env=env,
+        text=True,
+    )
+    deadline = time.monotonic() + _SERVER_START_TIMEOUT_S
+    line = ""
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if "listening on" in line:
+            break
+    m = re.search(r"tcp://[\w.\-]+:(\d+)", line)
+    if not m:
+        proc.kill()
+        raise RuntimeError(f"server subprocess never announced its port: {line!r}")
+    return proc, f"tcp://127.0.0.1:{m.group(1)}"
+
+
+def _vm_hwm_mb(pid: int) -> float:
+    with open(f"/proc/{pid}/status") as fh:
+        for line in fh:
+            if line.startswith("VmHWM:"):
+                return int(line.split()[1]) / 1024.0
+    raise RuntimeError("no VmHWM in /proc status")
+
+
+def _cpu_seconds(pid: int) -> float:
+    """utime+stime of the process from /proc/<pid>/stat, in seconds."""
+    stat = Path(f"/proc/{pid}/stat").read_text()
+    fields = stat.rsplit(")", 1)[1].split()  # comm may contain spaces/parens
+    utime, stime = int(fields[11]), int(fields[12])
+    return (utime + stime) / os.sysconf("SC_CLK_TCK")
+
+
+# -- round 1+2: per-mode subprocess server — wall, server CPU, peak RSS -------
+def _mode_round(mode: str, sizes: list[int], reps: int) -> tuple[list[str], dict]:
+    """One fresh subprocess server per mode (VmHWM is monotonic, CPU and
+    RSS must not bleed across modes).  For each size: time puts and gets,
+    then charge ``reps`` gets of that blob to the server's CPU clock."""
+    lines: list[str] = []
+    out: dict = {"peaks": []}
+    with tempfile.TemporaryDirectory() as root:
+        proc, url = _spawn_server(root)
+        try:
+            rb = _client(url, mode)
+            try:
+                for size in sizes:
+                    data = os.urandom(size)
+                    key = f"k{size}"
+                    put_s = _best_of(
+                        lambda: rb.write_blob(key, "blob.bin", data), reps
+                    )
+                    # one warm read: repopulates the digest sidecar (the
+                    # restart-survivable path) and warms the page cache —
+                    # both modes alike
+                    rb.read_blob(key, "blob.bin")
+                    cpu0 = _cpu_seconds(proc.pid)
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        rb.read_blob(key, "blob.bin")
+                    wall = time.perf_counter() - t0
+                    # below one clock tick the delta reads as 0 — clamp so
+                    # the reported MB/s is a finite lower bound
+                    tick = 1.0 / os.sysconf("SC_CLK_TCK")
+                    cpu = max(_cpu_seconds(proc.pid) - cpu0, tick)
+                    peak = _vm_hwm_mb(proc.pid)
+                    out["peaks"].append(peak)
+                    out[size] = {
+                        "get_wall_mbps": reps * size / max(wall, 1e-9) / 1e6,
+                        "get_cpu_mbps": reps * size / cpu / 1e6,
+                    }
+                    lines.append(
+                        f"streaming_{mode}_{max(size >> 20, 1)}mb,"
+                        f"{(put_s + wall / reps) * 1e6:.0f},"
+                        f"put={size / max(put_s, 1e-9) / 1e6:.0f}MB/s "
+                        f"get={out[size]['get_wall_mbps']:.0f}MB/s "
+                        f"get_per_server_cpu={out[size]['get_cpu_mbps']:.0f}MB/s "
+                        f"server_peak_rss={peak:.0f}MB"
+                    )
+            finally:
+                rb.close()
+        finally:
+            proc.terminate()
+            proc.wait(timeout=10)
+    return lines, out
+
+
+# -- round 3: probe-walk round trips ------------------------------------------
+def _probe_walk_round(depth: int) -> list[str]:
+    with tempfile.TemporaryDirectory() as root:
+        server = StoreServer(LocalFSBackend(Path(root) / "pool")).start()
+        rb = _client(server.url, "streamed")
+        try:
+            store = IntermediateStore(backend=rb)
+            policy = TSAR()
+            chain = PrefixKey("ds", tuple(ModuleRef(f"m{i}") for i in range(depth)))
+            before = rb.server_stats()["ops"]
+            probe_reusable_prefix(store, policy, chain)
+            after = rb.server_stats()["ops"]
+            batch_trips = after.get("batch", 0) - before.get("batch", 0)
+            singular_trips = after.get("exists", 0) - before.get("exists", 0)
+            assert batch_trips == 1 and singular_trips == 0, (
+                f"depth-{depth} probe walk took {batch_trips} batch + "
+                f"{singular_trips} singular round trips; want exactly 1 + 0"
+            )
+            return [
+                f"streaming_probe_walk_depth{depth},0,"
+                f"round_trips={batch_trips} (was {depth} singular exists)"
+            ]
+        finally:
+            rb.close()
+            server.stop()
+
+
+# -- round 4: torn-stream canary ----------------------------------------------
+def _torn_stream_canary() -> list[str]:
+    with tempfile.TemporaryDirectory() as root:
+        pool = Path(root) / "pool"
+        server = StoreServer(LocalFSBackend(pool)).start()
+        try:
+            raw = socket.create_connection((server.host, server.port), timeout=5)
+            P.send_frame(
+                raw,
+                {"op": "write_blob_chunked", "key": "torn",
+                 "name": "manifest.json", "size": 1 << 20,
+                 "chunk_bytes": 1 << 14},
+            )
+            ack, _ = P.recv_frame(raw)
+            assert ack.get("ready"), ack
+            P.send_chunk(raw, b"x" * (1 << 14))
+            raw.close()  # die with 63 chunks owed
+            rb = _client(server.url, "streamed")
+            try:
+                deadline = time.monotonic() + 10
+                while time.monotonic() < deadline:
+                    if server.stats()["streaming"].get("spill_aborts", 0) >= 1:
+                        break
+                    time.sleep(0.02)
+                aborts = server.stats()["streaming"].get("spill_aborts", 0)
+                assert aborts >= 1, "server never reclaimed the torn stream"
+                assert rb.exists("torn") is False, "partial blob became visible"
+                spills = [
+                    p for p in pool.rglob("*")
+                    if p.name.startswith(".") and ".tmp." in p.name
+                ]
+                assert spills == [], f"spill files leaked: {spills}"
+            finally:
+                rb.close()
+        finally:
+            server.stop()
+    return ["streaming_torn_canary,0,partial_visible=0 spill_leaks=0"]
+
+
+# -- driver -------------------------------------------------------------------
+def run(smoke: bool = False) -> list[str]:
+    if smoke:
+        sizes = [1 << 18, 1 << 21]  # 256 KiB, 2 MiB
+        reps = 2
+    else:
+        sizes = [1 << 23, 1 << 25, 1 << 27]  # 8 MiB, 32 MiB, 128 MiB
+        reps = 4
+
+    streamed_lines, streamed = _mode_round("streamed", sizes, reps)
+    oneshot_lines, oneshot = _mode_round("oneshot", sizes, reps)
+    lines = oneshot_lines + streamed_lines
+
+    largest = max(sizes)
+    cap_ratio = streamed[largest]["get_cpu_mbps"] / oneshot[largest]["get_cpu_mbps"]
+    wall_ratio = streamed[largest]["get_wall_mbps"] / oneshot[largest]["get_wall_mbps"]
+    lines.append(
+        f"streaming_get_speedup_{largest >> 20 or 1}mb,0,"
+        f"server_capacity={cap_ratio:.2f}x wall={wall_ratio:.2f}x"
+    )
+    growth = streamed["peaks"][-1] - streamed["peaks"][0]
+    lines.append(
+        f"streaming_rss_flatness,0,"
+        f"streamed_growth={growth:.0f}MB over "
+        f"{(sizes[-1] - sizes[0]) >> 20}MB of blob growth "
+        f"(oneshot_peak={oneshot['peaks'][-1]:.0f}MB)"
+    )
+    if not smoke:
+        assert cap_ratio >= 2.0, (
+            f"chunked GET must serve >=2x bytes per server-CPU-second at "
+            f"{largest >> 20} MiB, got {cap_ratio:.2f}x"
+        )
+        # streamed: peak must NOT track blob size (bounded buffers); give
+        # generous slack for allocator noise, far below the 120 MiB of
+        # blob-size growth the one-shot server faithfully materializes
+        assert growth < 64, (
+            f"streamed server peak RSS grew {growth:.0f}MB across blob sizes"
+        )
+        assert oneshot["peaks"][-1] >= (sizes[-1] >> 20) * 0.9, (
+            "one-shot server should have materialized the largest blob"
+        )
+
+    lines += _probe_walk_round(depth=8)
+    lines += _torn_stream_canary()
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run(smoke="--smoke" in sys.argv)))

@@ -17,6 +17,7 @@ def main() -> None:
         bench_risp,
         bench_serving_load,
         bench_sharded_store,
+        bench_streaming,
         bench_time_gain,
         roofline,
     )
@@ -32,6 +33,7 @@ def main() -> None:
         ("recommend (Ch. 4 recommendation surface, repro.api)", bench_recommend.run),
         ("remote_store (repro.net cross-process pool)", bench_remote_store.run),
         ("sharded_store (repro.net cluster: shards + replication)", bench_sharded_store.run),
+        ("streaming (wire v2: chunked transfer + batched probes)", bench_streaming.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

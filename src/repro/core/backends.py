@@ -19,12 +19,15 @@ Backends:
 from __future__ import annotations
 
 import hashlib
+import io
 import os
 import shutil
+import tempfile
 import threading
 from abc import ABC, abstractmethod
 from collections import OrderedDict
 from pathlib import Path
+from typing import BinaryIO, Iterable
 
 
 def _key_hash(key: str) -> str:
@@ -40,6 +43,93 @@ class BackendUnavailable(RuntimeError):
     "not reusable at the moment" and fall back to recomputing rather than
     failing the run or pruning records for artifacts that are still alive.
     """
+
+
+class BlobWriter(ABC):
+    """Incremental sink for one blob's bytes (the streaming write seam).
+
+    The contract that matters for torn streams: nothing a reader can observe
+    changes until :meth:`commit` — a writer abandoned mid-stream (or
+    explicitly :meth:`abort`-ed) leaves no partial blob behind and reclaims
+    any spill space it used.  ``commit``/``abort`` are idempotent.
+    """
+
+    @abstractmethod
+    def write(self, data: bytes | bytearray | memoryview) -> None:
+        """Append a chunk."""
+
+    @abstractmethod
+    def commit(self) -> int:
+        """Atomically publish the accumulated bytes; return bytes stored."""
+
+    @abstractmethod
+    def abort(self) -> None:
+        """Discard everything written so far (reclaim spill space)."""
+
+
+class _SpillBlobWriter(BlobWriter):
+    """Default streaming writer for backends without a native one: chunks
+    append to an anonymous spill file on disk (constant memory while the
+    stream is in flight), and ``commit`` replays them through the backend's
+    one-shot ``write_blob`` — partial streams never reach the backend."""
+
+    def __init__(self, backend: "StorageBackend", key: str, name: str) -> None:
+        self._backend = backend
+        self._key = key
+        self._name = name
+        self._spill: BinaryIO | None = tempfile.TemporaryFile(prefix="repro-spill-")
+        self._nbytes = 0
+
+    def write(self, data: bytes | bytearray | memoryview) -> None:
+        if self._spill is None:
+            raise RuntimeError("writer already committed/aborted")
+        self._spill.write(data)
+        self._nbytes += len(data)
+
+    def commit(self) -> int:
+        if self._spill is None:
+            return self._nbytes
+        spill, self._spill = self._spill, None
+        try:
+            spill.seek(0)
+            return self._backend.write_blob(self._key, self._name, spill.read())
+        finally:
+            spill.close()  # anonymous tempfile: close() reclaims the space
+
+    def abort(self) -> None:
+        if self._spill is not None:
+            spill, self._spill = self._spill, None
+            spill.close()
+
+
+class BlobReader:
+    """Sized, file-like source for one blob (the streaming read seam).
+
+    ``raw`` is any object with ``readinto``; when it is a real file the
+    consumer may use ``fileno()`` for zero-copy sends (``os.sendfile``).
+    """
+
+    def __init__(self, raw: BinaryIO, size: int) -> None:
+        self.raw = raw
+        self.size = size
+
+    def readinto(self, view: memoryview) -> int:
+        return self.raw.readinto(view)
+
+    def fileno(self) -> int:
+        return self.raw.fileno()  # raises for memory-backed readers
+
+    def close(self) -> None:
+        try:
+            self.raw.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "BlobReader":
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self.close()
 
 
 class StorageBackend(ABC):
@@ -74,6 +164,81 @@ class StorageBackend(ABC):
     def nbytes(self, key: str) -> int:
         """Total stored bytes of artifact ``key`` (0 if absent)."""
         raise NotImplementedError(f"{self.name} backend does not track sizes")
+
+    # -- streaming / batched extensions (defaults compose from the core ops) --
+    def open_blob_writer(self, key: str, name: str) -> BlobWriter:
+        """Incremental writer for blob ``name`` of ``key``.  The default
+        spills chunks to an anonymous temp file and publishes through
+        ``write_blob`` at commit; backends with a native atomic path
+        (``LocalFSBackend``) override for true constant-memory commits.
+        Until ``commit``, no reader observes any of the written bytes."""
+        return _SpillBlobWriter(self, key, name)
+
+    def open_blob_reader(self, key: str, name: str) -> BlobReader:
+        """Sized incremental reader for blob ``name`` of ``key`` (raises
+        ``KeyError``/``FileNotFoundError`` like ``read_blob`` when absent).
+        The default materializes ``read_blob`` once; file-backed backends
+        override to stream straight off disk."""
+        data = self.read_blob(key, name)
+        return BlobReader(io.BytesIO(data), len(data))
+
+    def exists_many(self, keys: Iterable[str]) -> dict[str, "bool | None"]:
+        """Presence of many artifacts at once.  ``None`` marks a key whose
+        presence is *undecidable right now* (``BackendUnavailable`` — e.g.
+        every replica of it unreachable in a distributed backend); plain
+        backends never return it.  Remote backends override this with a
+        single batched round trip — the deep-chain probe walk depends on
+        that being O(1) round trips, not O(depth)."""
+        out: dict[str, bool | None] = {}
+        for key in keys:
+            try:
+                out[key] = self.exists(key)
+            except BackendUnavailable:
+                out[key] = None
+        return out
+
+
+class _FSBlobWriter(BlobWriter):
+    """LocalFS streaming writer: append to a dot-tmp spill file in the object
+    directory, commit via atomic rename — the same write-then-rename
+    discipline as ``write_blob``, with constant memory for any blob size."""
+
+    def __init__(self, directory: Path, name: str) -> None:
+        directory.mkdir(parents=True, exist_ok=True)
+        self._final = directory / name
+        self._tmp = directory / f".{name}.tmp.{os.getpid()}.{threading.get_ident()}"
+        self._fh: BinaryIO | None = open(self._tmp, "wb")
+        self._nbytes = 0
+
+    def write(self, data: bytes | bytearray | memoryview) -> None:
+        if self._fh is None:
+            raise RuntimeError("writer already committed/aborted")
+        self._fh.write(data)
+        self._nbytes += len(data)
+
+    def commit(self) -> int:
+        if self._fh is None:
+            return self._nbytes
+        fh, self._fh = self._fh, None
+        fh.close()
+        try:
+            os.replace(self._tmp, self._final)
+        except OSError:
+            try:
+                os.unlink(self._tmp)
+            except OSError:
+                pass
+            raise
+        return self._nbytes
+
+    def abort(self) -> None:
+        if self._fh is not None:
+            fh, self._fh = self._fh, None
+            fh.close()
+            try:
+                os.unlink(self._tmp)
+            except OSError:
+                pass
 
 
 class LocalFSBackend(StorageBackend):
@@ -131,6 +296,17 @@ class LocalFSBackend(StorageBackend):
             if f.is_file() and not f.name.startswith(".")  # skip tmp leftovers
         )
 
+    def open_blob_writer(self, key: str, name: str) -> BlobWriter:
+        return _FSBlobWriter(self._obj_dir(key), name)
+
+    def open_blob_reader(self, key: str, name: str) -> BlobReader:
+        path = self._obj_dir(key) / name
+        try:
+            fh = open(path, "rb")
+        except FileNotFoundError:
+            raise KeyError(f"{key}/{name}") from None
+        return BlobReader(fh, os.fstat(fh.fileno()).st_size)
+
 
 class MemoryBackend(StorageBackend):
     """In-process backend: tests, ephemeral stores, and hot-tier caching."""
@@ -162,6 +338,31 @@ class MemoryBackend(StorageBackend):
 
     def nbytes(self, key: str) -> int:
         return sum(len(b) for b in self._objects.get(key, {}).values())
+
+    def open_blob_writer(self, key: str, name: str) -> BlobWriter:
+        # the destination is memory anyway: accumulate directly, publish on
+        # commit (the dict assignment is the atomic step)
+        backend = self
+
+        class _MemWriter(BlobWriter):
+            def __init__(self) -> None:
+                self._parts: list[bytes] | None = []
+
+            def write(self, data: bytes | bytearray | memoryview) -> None:
+                if self._parts is None:
+                    raise RuntimeError("writer already committed/aborted")
+                self._parts.append(bytes(data))
+
+            def commit(self) -> int:
+                if self._parts is None:
+                    return 0
+                parts, self._parts = self._parts, None
+                return backend.write_blob(key, name, b"".join(parts))
+
+            def abort(self) -> None:
+                self._parts = None
+
+        return _MemWriter()
 
 
 class TieredBackend(StorageBackend):
@@ -266,6 +467,20 @@ class TieredBackend(StorageBackend):
         # hold resurrected blobs from a promote racing a delete — those must
         # not make an evicted artifact look alive
         return self.cold.exists(key)
+
+    def exists_many(self, keys: Iterable[str]) -> dict[str, bool | None]:
+        return self.cold.exists_many(keys)
+
+    def open_blob_writer(self, key: str, name: str) -> BlobWriter:
+        # streamed blobs skip the hot mirror on purpose: anything big enough
+        # to stream would evict the whole hot set for one entry (the next
+        # read promotes it if it actually fits)
+        return self.cold.open_blob_writer(key, name)
+
+    def open_blob_reader(self, key: str, name: str) -> BlobReader:
+        # serve streams straight from cold: correct (authoritative tier) and
+        # constant-memory; small blobs keep using read_blob and the hot path
+        return self.cold.open_blob_reader(key, name)
 
     def write_meta(self, name: str, text: str) -> None:
         self.cold.write_meta(name, text)

@@ -77,22 +77,30 @@ def probe_reusable_prefix(
     run, which legitimately have no artifact yet.
     Returns ``(prefix, value, load_seconds)`` — ``(None, None, 0.0)`` when
     nothing is reusable.
+
+    The whole parent chain is probed in ONE batched presence round trip
+    (``store.has_state_many``) instead of one per link: a depth-d chain
+    against a remote pool used to cost d round trips before the first byte
+    of a reusable artifact moved.
     """
-    while candidate is not None:
-        key = candidate.key(policy.with_state)
-        state = store.has_state(key)
+    chain: list[tuple[PrefixKey, str]] = []
+    node = candidate
+    while node is not None:
+        chain.append((node, node.key(policy.with_state)))
+        node = node.parent()
+    states = store.has_state_many([key for _, key in chain]) if chain else {}
+    for candidate, key in chain:
+        state = states.get(key, "unreachable")
         if state == "present":
             t0 = time.perf_counter()
             try:
                 value = store.get(key)
-            except KeyError:  # evicted between has() and get() by another run
+            except KeyError:  # evicted between the batched probe and get()
                 policy.stored.pop(key, None)
-                candidate = candidate.parent()
                 continue
             except BackendUnavailable:
-                # shard(s) holding it died between has() and get(): the bytes
-                # may survive, so keep bookkeeping and try a shorter prefix
-                candidate = candidate.parent()
+                # shard(s) holding it died between the probe and get(): the
+                # bytes may survive, so keep bookkeeping, try a shorter prefix
                 continue
             return candidate, value, time.perf_counter() - t0
         # artifact evicted: drop stale bookkeeping, try shorter prefix —
@@ -100,7 +108,6 @@ def probe_reusable_prefix(
         # its bookkeeping (the bytes are still out there)
         if state == "absent" and key not in keep:
             policy.stored.pop(key, None)
-        candidate = candidate.parent()
     return None, None, 0.0
 
 

@@ -26,7 +26,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
@@ -198,26 +198,55 @@ class IntermediateStore:
                 alive = self.backend.exists(key)
             except BackendUnavailable:
                 return "unreachable"
-            if key in self.records:
-                if alive:
-                    return "present"
-                # phantom record: the artifact vanished without us hearing
-                # (evicted fleet-wide before we connected, crashed writer,
-                # stale shared index).  Prune it so budget accounting never
-                # counts bytes that are not there, and tell listeners so
-                # policy bookkeeping converges like any other eviction.
-                del self.records[key]
-                self._dirty = True
-                self._mutations_since_flush += 1
-                for fn in self._evict_listeners:
-                    fn(key)
-                return "absent"
-            # a sibling process sharing this backend (remote store) may have
-            # persisted the artifact after our index snapshot: adopt it
+            return self._classify_presence(key, alive)
+
+    def has_state_many(self, keys: "Sequence[str]") -> dict[str, str]:
+        """Batched :meth:`has_state`: one backend round trip for any number
+        of keys (``exists_many`` coalesces into a single ``batch`` request on
+        a remote pool; a sharded pool fans it out once per involved shard).
+        Same per-key answers AND same side effects — phantom records are
+        pruned, sibling artifacts adopted — so a deep reuse-probe walk costs
+        O(1) round trips instead of O(depth)."""
+        keys = list(dict.fromkeys(keys))
+        if not keys:
+            return {}
+        with self._lock:
+            try:
+                presence = self.backend.exists_many(keys)
+            except BackendUnavailable:
+                return {k: "unreachable" for k in keys}
+            out: dict[str, str] = {}
+            for k in keys:
+                alive = presence.get(k)
+                if alive is None:
+                    out[k] = "unreachable"
+                else:
+                    out[k] = self._classify_presence(k, bool(alive))
+            return out
+
+    def _classify_presence(self, key: str, alive: bool) -> str:
+        """Map one key's backend-reported presence to a ``has_state`` answer,
+        applying the bookkeeping side effects.  Callers hold ``_lock``."""
+        if key in self.records:
             if alive:
-                self._adopt_record(key)
                 return "present"
+            # phantom record: the artifact vanished without us hearing
+            # (evicted fleet-wide before we connected, crashed writer,
+            # stale shared index).  Prune it so budget accounting never
+            # counts bytes that are not there, and tell listeners so
+            # policy bookkeeping converges like any other eviction.
+            del self.records[key]
+            self._dirty = True
+            self._mutations_since_flush += 1
+            for fn in self._evict_listeners:
+                fn(key)
             return "absent"
+        # a sibling process sharing this backend (remote store) may have
+        # persisted the artifact after our index snapshot: adopt it
+        if alive:
+            self._adopt_record(key)
+            return "present"
+        return "absent"
 
     def _shared_index(self) -> dict[str, Any]:
         """The pool's ``index.json``, parsed, cached for one flush interval —

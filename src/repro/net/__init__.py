@@ -23,6 +23,8 @@ from .cache import CachingBackend
 from .client import LeaseGrant, RemoteBackend
 from .flight import DistributedSingleFlight
 from .protocol import (
+    DEFAULT_CHUNK_BYTES,
+    PROTO_VERSION,
     ConnectionClosed,
     IntegrityError,
     ProtocolError,
@@ -36,6 +38,8 @@ from .sharded import ShardedBackend
 __all__ = [
     "CachingBackend",
     "ConnectionClosed",
+    "DEFAULT_CHUNK_BYTES",
+    "PROTO_VERSION",
     "DistributedSingleFlight",
     "HashRing",
     "IntegrityError",

@@ -46,9 +46,16 @@ class CachingBackend(StorageBackend):
         self,
         inner: StorageBackend,
         capacity_bytes: int = 256 * 1024 * 1024,
+        max_entry_fraction: float = 0.5,
     ) -> None:
+        if not 0.0 < max_entry_fraction <= 1.0:
+            raise ValueError("max_entry_fraction must be in (0, 1]")
         self.inner = inner
         self.capacity_bytes = capacity_bytes
+        # one blob may occupy at most this fraction of the cache: a single
+        # multi-GB artifact passing through must not evict the entire hot
+        # set of small, frequently-reused prefixes to buy one doomed entry
+        self.max_entry_bytes = int(capacity_bytes * max_entry_fraction)
         self._lock = threading.Lock()
         self._blobs: OrderedDict[tuple[str, str], tuple[bytes, str]] = OrderedDict()
         self._names: dict[str, set[str]] = {}  # key -> cached blob names
@@ -64,6 +71,7 @@ class CachingBackend(StorageBackend):
         self.validation_failures = 0
         self.stale_inserts_dropped = 0  # fetches outrun by an invalidation
         self.purge_examined = 0  # entries looked at by invalidations (O() proof)
+        self.oversize_rejected = 0  # blobs too large to be worth caching
 
     # -- cache bookkeeping (callers hold the lock) ---------------------------
     def _insert(self, key: str, name: str, data: bytes, gen: int) -> None:
@@ -72,7 +80,8 @@ class CachingBackend(StorageBackend):
             # inserting now would resurrect a dead blob
             self.stale_inserts_dropped += 1
             return
-        if len(data) > self.capacity_bytes:
+        if len(data) > self.max_entry_bytes:
+            self.oversize_rejected += 1
             return
         ck = (key, name)
         prev = self._blobs.pop(ck, None)
@@ -191,6 +200,11 @@ class CachingBackend(StorageBackend):
 
     def exists(self, key: str) -> bool:
         return self.inner.exists(key)
+
+    def exists_many(self, keys):
+        # presence is never cached (see module docstring) — pass the batch
+        # through so a deep probe walk stays one round trip
+        return self.inner.exists_many(keys)
 
     def write_meta(self, name: str, text: str) -> None:
         self.inner.write_meta(name, text)

@@ -27,10 +27,12 @@ import socket
 import threading
 import time
 import uuid
-from typing import Any, Callable
+from typing import Any, Callable, Iterable, NoReturn
 
 from ..core.backends import StorageBackend
 from .protocol import (
+    DEFAULT_CHUNK_BYTES,
+    MAX_BATCH_OPS,
     ConnectionClosed,
     IntegrityError,
     ProtocolError,
@@ -38,7 +40,9 @@ from .protocol import (
     StoreUnreachable,
     digest,
     parse_url,
+    recv_blob_stream,
     recv_frame,
+    send_blob_stream,
     send_frame,
 )
 
@@ -71,6 +75,8 @@ class RemoteBackend(StorageBackend):
         retries: int = 5,
         retry_backoff_s: float = 0.05,
         max_pool: int = 8,
+        stream_threshold: int = 1 << 20,
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
     ) -> None:
         self.host, self.port = parse_url(url)
         self.client_id = client_id or f"c-{uuid.uuid4().hex[:12]}"
@@ -79,6 +85,12 @@ class RemoteBackend(StorageBackend):
         self.retries = retries
         self.retry_backoff_s = retry_backoff_s
         self.max_pool = max_pool
+        # blobs at/above stream_threshold travel chunked (wire v2) when the
+        # server supports it; negotiation is lazy — the first bad_op reply
+        # marks the server v1 and every later op goes one-shot/pipelined
+        self.stream_threshold = stream_threshold
+        self.chunk_bytes = chunk_bytes
+        self._server_proto: int | None = None  # None = not yet probed
         self._pool: list[socket.socket] = []
         self._pool_lock = threading.Lock()
         self._lease_lock = threading.Lock()
@@ -89,6 +101,9 @@ class RemoteBackend(StorageBackend):
         self._event_thread: threading.Thread | None = None
         self._event_sock: socket.socket | None = None
         self.reconnects = 0  # transport-level redials (observability/tests)
+        self.streamed_writes = 0  # blobs that traveled chunked (tests/bench)
+        self.streamed_reads = 0
+        self.batched_requests = 0  # batch round trips issued
 
     # -- connection management -------------------------------------------------
     def _dial(self) -> socket.socket:
@@ -138,6 +153,54 @@ class RemoteBackend(StorageBackend):
             self._event_thread = None
 
     # -- request core ----------------------------------------------------------
+    def _scrap(self, sock: socket.socket) -> None:
+        """Discard a socket whose framing state is unknown — and its pooled
+        siblings, which are almost certainly from the same dead server epoch,
+        rather than letting stale sockets burn through the retry budget one
+        by one."""
+        with self._pool_lock:
+            stale, self._pool = self._pool, []
+        for s in [sock, *stale]:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def _with_retries(self, fn: Callable[[socket.socket], Any]) -> Any:
+        """Run ``fn(sock)`` on a pooled socket, redialing on transport
+        failure with exponential backoff.  ``fn`` owns the socket for its
+        whole call — it may exchange *multiple* frames (a chunked stream, a
+        pipelined batch) and every frame of a failed attempt is replayed on
+        the fresh socket, which is safe because all ops are idempotent at
+        the server."""
+        if self._closed:
+            raise RemoteStoreError("backend is closed")
+        last: Exception | None = None
+        for attempt in range(self.retries + 1):
+            try:
+                sock = self._checkout()
+            except OSError as e:  # server down/restarting: back off and redial
+                last = e
+                self.reconnects += 1
+                if attempt < self.retries:  # no pointless sleep before raising
+                    time.sleep(self.retry_backoff_s * (2**attempt))
+                continue
+            try:
+                result = fn(sock)
+            except (ProtocolError, OSError) as e:
+                self._scrap(sock)
+                last = e
+                self.reconnects += 1
+                if attempt < self.retries:  # no pointless sleep before raising
+                    time.sleep(self.retry_backoff_s * (2**attempt))
+                continue
+            self._checkin(sock)
+            return result
+        raise StoreUnreachable(
+            f"store server {self.host}:{self.port} unreachable after "
+            f"{self.retries + 1} attempts: {last}"
+        ) from last
+
     def _exchange(
         self,
         header: dict[str, Any],
@@ -166,17 +229,7 @@ class RemoteBackend(StorageBackend):
                 send_frame(sock, header, payload)
                 resp, data = recv_frame(sock)
             except (ProtocolError, OSError) as e:
-                # the socket's framing state is unknown: never reuse it — and
-                # its pooled siblings are almost certainly from the same dead
-                # server epoch, so drop them all rather than letting stale
-                # sockets burn through the whole retry budget one by one
-                with self._pool_lock:
-                    stale, self._pool = self._pool, []
-                for s in [sock, *stale]:
-                    try:
-                        s.close()
-                    except OSError:
-                        pass
+                self._scrap(sock)
                 last = e
                 self.reconnects += 1
                 if attempt < self.retries:  # no pointless sleep before raising
@@ -187,6 +240,22 @@ class RemoteBackend(StorageBackend):
             f"store server {self.host}:{self.port} unreachable after "
             f"{self.retries + 1} attempts: {last}"
         ) from last
+
+    @staticmethod
+    def _raise_reply(resp: dict[str, Any]) -> NoReturn:
+        """Map a server error reply to the typed exception the store layer
+        expects.  The reply ``kind`` rides on ``RemoteStoreError`` so callers
+        can distinguish a v1 server's ``bad_op`` (fall back) from a real
+        failure (raise)."""
+        kind = resp.get("kind", "server")
+        msg = resp.get("error", "remote store error")
+        if kind == "not_found":
+            raise KeyError(msg)
+        if kind == "integrity":
+            raise IntegrityError(msg)
+        err = RemoteStoreError(msg)
+        err.kind = kind
+        raise err
 
     def _request(
         self,
@@ -199,31 +268,92 @@ class RemoteBackend(StorageBackend):
         self._checkin(sock)
         if resp.get("ok"):
             return resp, data
-        kind = resp.get("kind", "server")
-        msg = resp.get("error", "remote store error")
-        if kind == "not_found":
-            raise KeyError(msg)
-        if kind == "integrity":
-            raise IntegrityError(msg)
-        raise RemoteStoreError(msg)
+        self._raise_reply(resp)
 
     # -- StorageBackend contract -----------------------------------------------
     def write_blob(self, key: str, name: str, data: bytes) -> int:
+        if len(data) >= self.stream_threshold and self._server_proto != 1:
+            try:
+                return self._write_blob_chunked(key, name, data)
+            except RemoteStoreError as e:
+                if getattr(e, "kind", "") != "bad_op":
+                    raise
+                # v1 server: remember, fall through to the one-shot path
+                self._server_proto = 1
         resp, _ = self._request(
             {"op": "write_blob", "key": key, "name": name, "digest": digest(data)},
             data,
         )
         return int(resp["nbytes"])
 
+    def _write_blob_chunked(self, key: str, name: str, data: bytes) -> int:
+        """Chunked PUT: request -> ready ack -> chunk stream -> commit reply.
+        The ready ack lands *before* any chunk leaves, so a v1 server's
+        ``bad_op`` costs one round trip, not one blob; a torn stream replays
+        whole on a fresh socket (server-side commit is atomic + idempotent)."""
+        header = {
+            "op": "write_blob_chunked",
+            "key": key,
+            "name": name,
+            "size": len(data),
+            "chunk_bytes": self.chunk_bytes,
+        }
+
+        def put(sock: socket.socket) -> dict[str, Any]:
+            send_frame(sock, header)
+            ack, _ = recv_frame(sock)
+            if not ack.get("ok"):
+                return ack  # server-reported: not a transport failure
+            send_blob_stream(sock, data, self.chunk_bytes)
+            final, _ = recv_frame(sock)
+            return final
+
+        resp = self._with_retries(put)
+        if not resp.get("ok"):
+            self._raise_reply(resp)
+        self.streamed_writes += 1
+        return int(resp["nbytes"])
+
     def read_blob(self, key: str, name: str) -> bytes:
-        req = {"op": "read_blob", "key": key, "name": name}
-        resp, data = self._request(req)
-        if resp.get("digest") != digest(data):
+        declared, folded, data = self._fetch_blob(key, name)
+        if declared != folded:
             # one corrupt transfer is retryable; a corrupt blob at rest is not
-            resp, data = self._request(req)
-            if resp.get("digest") != digest(data):
+            declared, folded, data = self._fetch_blob(key, name)
+            if declared != folded:
                 raise IntegrityError(f"blob {key}/{name} failed digest verification")
         return data
+
+    def _fetch_blob(self, key: str, name: str) -> tuple[str, str, bytes]:
+        """One GET; returns (declared digest, locally computed digest, data).
+        The request advertises ``accept_chunked`` — a v2 server streams blobs
+        ≥ ``stream_min_bytes`` and we fold SHA-256 as chunks arrive; a v1
+        server ignores the unknown fields and answers one-shot.  No
+        negotiation round trip either way."""
+        req: dict[str, Any] = {"op": "read_blob", "key": key, "name": name}
+        if self._server_proto != 1:
+            req.update(
+                accept_chunked=True,
+                stream_min_bytes=self.stream_threshold,
+                chunk_bytes=self.chunk_bytes,
+            )
+
+        def get(sock: socket.socket) -> tuple[dict[str, Any], str, bytes]:
+            send_frame(sock, req)
+            resp, data = recv_frame(sock)
+            if not resp.get("ok") or not resp.get("chunked"):
+                return resp, digest(data), data
+            buf, folded, end = recv_blob_stream(sock, int(resp["size"]))
+            if end.get("abort"):
+                return end, "", b""  # server-reported mid-stream failure
+            resp = dict(resp)
+            resp["digest"] = end.get("digest")
+            self.streamed_reads += 1
+            return resp, folded, bytes(buf)
+
+        resp, folded, data = self._with_retries(get)
+        if not resp.get("ok"):
+            self._raise_reply(resp)
+        return resp.get("digest"), folded, data
 
     def delete(self, key: str) -> None:
         self._request({"op": "delete", "key": key, "client_id": self.client_id})
@@ -244,6 +374,97 @@ class RemoteBackend(StorageBackend):
     def nbytes(self, key: str) -> int:
         resp, _ = self._request({"op": "nbytes", "key": key})
         return int(resp["nbytes"])
+
+    # -- v2: batched / pipelined small ops --------------------------------------
+    def hello(self) -> dict[str, Any]:
+        """Probe the server's protocol version and feature list.  Never
+        required — every v2 path negotiates lazily — but callers that want to
+        know up front (diagnostics, tests) can ask."""
+        try:
+            resp, _ = self._request({"op": "hello"})
+        except RemoteStoreError as e:
+            if getattr(e, "kind", "") != "bad_op":
+                raise
+            self._server_proto = 1
+            return {"proto": 1, "features": []}
+        self._server_proto = int(resp.get("proto", 1))
+        return {"proto": self._server_proto, "features": resp.get("features", [])}
+
+    def batch(self, ops: list[dict[str, Any]]) -> list[dict[str, Any]]:
+        """Coalesce small read-only sub-ops (``exists``/``read_meta``/
+        ``nbytes``/``ping``) into one round trip.  Against a v1 server the
+        sub-ops are *pipelined* instead — all requests go out back-to-back on
+        one socket before the responses are read — so deep probe walks still
+        avoid per-op latency stacking.  Returns one result dict per sub-op
+        (server errors are captured per-result, not raised)."""
+        if not ops:
+            return []
+        if len(ops) > MAX_BATCH_OPS:
+            raise ValueError(f"batch of {len(ops)} exceeds {MAX_BATCH_OPS} sub-ops")
+        if self._server_proto != 1:
+            try:
+                resp, _ = self._request({"op": "batch", "ops": ops})
+                self.batched_requests += 1
+                results = resp["results"]
+                # an oversized read_meta bounces out of the batch: retry it
+                # singularly (rare; keeps the response header bounded)
+                for i, r in enumerate(results):
+                    if not r.get("ok") and r.get("kind") == "too_large":
+                        results[i] = self._singular(ops[i])
+                return results
+            except RemoteStoreError as e:
+                if getattr(e, "kind", "") != "bad_op":
+                    raise
+                self._server_proto = 1
+        return self._pipelined(ops)
+
+    def _singular(self, sub: dict[str, Any]) -> dict[str, Any]:
+        try:
+            resp, data = self._request(dict(sub))
+        except KeyError as e:
+            return {"ok": False, "error": str(e), "kind": "not_found"}
+        except RemoteStoreError as e:
+            return {"ok": False, "error": str(e), "kind": getattr(e, "kind", "server")}
+        if sub.get("op") == "read_meta" and not resp.get("none"):
+            resp = dict(resp)
+            resp["text"] = data.decode()
+        return resp
+
+    def _pipelined(self, ops: list[dict[str, Any]]) -> list[dict[str, Any]]:
+        def run(sock: socket.socket) -> list[dict[str, Any]]:
+            for sub in ops:
+                send_frame(sock, sub)
+            out: list[dict[str, Any]] = []
+            for sub in ops:
+                resp, data = recv_frame(sock)
+                if resp.get("ok") and sub.get("op") == "read_meta" and not resp.get("none"):
+                    resp = dict(resp)
+                    resp["text"] = data.decode()
+                out.append(resp)
+            return out
+
+        return self._with_retries(run)
+
+    def exists_many(self, keys: "Iterable[str]") -> dict[str, "bool | None"]:
+        """Batched presence probe: one round trip for any number of keys.
+        ``None`` marks a key whose presence could not be decided (server
+        unreachable or per-key server error) — the store treats those as
+        unreachable, never as absent."""
+        keys = list(keys)
+        if not keys:
+            return {}
+        out: dict[str, bool | None] = {}
+        for start in range(0, len(keys), MAX_BATCH_OPS):
+            group = keys[start : start + MAX_BATCH_OPS]
+            try:
+                results = self.batch([{"op": "exists", "key": k} for k in group])
+            except (RemoteStoreError, ProtocolError, OSError):
+                for k in group:
+                    out[k] = None
+                continue
+            for k, r in zip(group, results):
+                out[k] = bool(r.get("exists")) if r.get("ok") else None
+        return out
 
     # -- coordination ----------------------------------------------------------
     def lease_acquire(

@@ -29,7 +29,9 @@ touch the network.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
+import os
 import socket
 import threading
 import time
@@ -37,11 +39,20 @@ from typing import Any
 
 from ..core.backends import StorageBackend
 from .protocol import (
+    DEFAULT_CHUNK_BYTES,
+    MAX_BATCH_OPS,
+    MAX_CHUNK_BYTES,
+    MAX_HEADER_BYTES,
+    MAX_PAYLOAD_BYTES,
+    PROTO_VERSION,
     ConnectionClosed,
     ProtocolError,
     digest,
     recv_frame,
+    recv_frame_into,
+    send_chunk_prefix,
     send_frame,
+    send_stream_end,
 )
 
 _MAX_LEASE_WAIT_S = 3600.0
@@ -104,6 +115,15 @@ class StoreServer:
         self._token_counter = itertools.count(1)
         self._counts_lock = threading.Lock()
         self._counts: dict[str, int] = {}
+        self._stream_counts: dict[str, int] = {}
+        # digest sidecar: content digests recorded at verified writes, so a
+        # chunked read can skip the server-side SHA-256 pass (the client's
+        # incremental fold is the end-to-end check) and go through
+        # ``os.sendfile`` without the bytes ever entering userspace.  Purely
+        # an optimization cache: lazily repopulated by folding reads after a
+        # restart, dropped on delete.
+        self._digest_lock = threading.Lock()
+        self._digests: dict[tuple[str, str], str] = {}
         # monotonic, not wall: uptime and every lease-wait deadline in this
         # process must be immune to NTP steps — a wall-clock jump must never
         # expire (or extend) a lease or report negative uptime
@@ -224,7 +244,10 @@ class StoreServer:
                     return
                 try:
                     self._dispatch(conn, header, payload)
-                except (BrokenPipeError, ConnectionResetError, OSError):
+                except (ProtocolError, OSError):
+                    # a tear mid-op (chunk stream truncated, peer vanished):
+                    # framing is unrecoverable — drop the connection quietly;
+                    # the op's own cleanup (spill abort) already ran
                     return
         finally:
             self._drop_conn(conn)
@@ -233,6 +256,10 @@ class StoreServer:
     def _count(self, op: str) -> None:
         with self._counts_lock:
             self._counts[op] = self._counts.get(op, 0) + 1
+
+    def _count_stream(self, what: str, n: int = 1) -> None:
+        with self._counts_lock:
+            self._stream_counts[what] = self._stream_counts.get(what, 0) + n
 
     def _dispatch(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
         op = req.get("op", "")
@@ -246,6 +273,11 @@ class StoreServer:
         except (KeyError, FileNotFoundError) as e:
             conn.send({"ok": False, "error": str(e), "kind": "not_found"})
         except (BrokenPipeError, ConnectionResetError):
+            raise
+        except ProtocolError:
+            # a tear *inside* a chunk stream: the connection's framing state
+            # is gone — it must be dropped, never answered (the per-op spill
+            # cleanup already ran via the handler's try/finally)
             raise
         except Exception as e:  # noqa: BLE001 - fault isolation per request
             conn.send({"ok": False, "error": f"{type(e).__name__}: {e}", "kind": "server"})
@@ -272,6 +304,20 @@ class StoreServer:
             return None
         return name
 
+    # -- digest sidecar --------------------------------------------------------
+    def _record_digest(self, key: str, name: str, hexd: str) -> None:
+        with self._digest_lock:
+            self._digests[(key, name)] = hexd
+
+    def _known_digest(self, key: str, name: str) -> str | None:
+        with self._digest_lock:
+            return self._digests.get((key, name))
+
+    def _forget_digests(self, key: str) -> None:
+        with self._digest_lock:
+            for k in [k for k in self._digests if k[0] == key]:
+                del self._digests[k]
+
     # -- storage ops ----------------------------------------------------------
     def _op_write_blob(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
         name = self._check_name(conn, req)
@@ -284,18 +330,188 @@ class StoreServer:
             )
             return
         n = self.backend.write_blob(req["key"], name, payload)
+        if want is not None:
+            self._record_digest(req["key"], name, want)
         conn.send({"ok": True, "nbytes": n})
 
     def _op_read_blob(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
         name = self._check_name(conn, req)
         if name is None:
             return
-        data = self.backend.read_blob(req["key"], name)
-        conn.send({"ok": True, "digest": digest(data)}, data)
+        key = req["key"]
+        if req.get("accept_chunked"):
+            # v2 client: stream large blobs; small ones still go one-shot
+            # (same fields as a v1 response, so the client's fallback parse
+            # is trivial).  A v1 server never sees accept_chunked — unknown
+            # request fields are ignored — which is the whole read-side
+            # negotiation: none needed.
+            stream_min = int(req.get("stream_min_bytes", 0))
+            reader = self.backend.open_blob_reader(key, name)
+            with reader:
+                if reader.size >= stream_min:
+                    self._stream_blob(conn, req, key, name, reader)
+                    return
+                data = reader.raw.read()
+            hexd = digest(data)
+            self._record_digest(key, name, hexd)
+            conn.send({"ok": True, "digest": hexd}, data)
+            return
+        data = self.backend.read_blob(key, name)
+        hexd = digest(data)
+        self._record_digest(key, name, hexd)
+        conn.send({"ok": True, "digest": hexd}, data)
+
+    def _stream_blob(self, conn, req, key: str, name: str, reader) -> None:
+        """Chunked read response: ``{"ok","chunked","size"}`` then chunk
+        frames and an end frame.  When the sidecar already knows the content
+        digest the payload goes through ``os.sendfile`` (zero-copy, no SHA
+        pass — the client's fold is the end-to-end check); otherwise we read
+        through one bounded buffer, folding as we go, and the fold both
+        terminates this stream and repopulates the sidecar."""
+        size = reader.size
+        chunk_bytes = max(
+            1, min(int(req.get("chunk_bytes", DEFAULT_CHUNK_BYTES)), MAX_CHUNK_BYTES)
+        )
+        known = self._known_digest(key, name)
+        fd = None
+        if known is not None and hasattr(os, "sendfile"):
+            try:
+                fd = reader.fileno()
+            except (OSError, ValueError, AttributeError):
+                fd = None  # memory-backed reader: fall through to the copy loop
+        with conn.send_lock:  # one frame sequence, never interleaved
+            send_frame(conn.sock, {"ok": True, "chunked": True, "size": size})
+            try:
+                if fd is not None:
+                    offset = 0
+                    while offset < size:
+                        n = min(chunk_bytes, size - offset)
+                        send_chunk_prefix(conn.sock, n)
+                        sent = 0
+                        while sent < n:
+                            sent += os.sendfile(
+                                conn.sock.fileno(), fd, offset + sent, n - sent
+                            )
+                        offset += n
+                        self._count_stream("chunks_out")
+                    send_stream_end(conn.sock, digest_hex=known)
+                    self._count_stream("sendfile_reads")
+                else:
+                    buf = bytearray(chunk_bytes)
+                    view = memoryview(buf)
+                    sha = hashlib.sha256()
+                    sent = 0
+                    while sent < size:
+                        n = reader.readinto(view)
+                        if n <= 0:
+                            raise OSError(
+                                f"blob {key}/{name} shrank mid-read "
+                                f"({sent} of {size} bytes)"
+                            )
+                        n = min(n, size - sent)
+                        sha.update(view[:n])
+                        send_frame(conn.sock, b'{"c":1}', view[:n])
+                        sent += n
+                        self._count_stream("chunks_out")
+                    hexd = sha.hexdigest()
+                    self._record_digest(key, name, hexd)
+                    send_stream_end(conn.sock, digest_hex=hexd)
+                self._count_stream("streamed_reads")
+            except (BrokenPipeError, ConnectionResetError, ProtocolError):
+                raise
+            except OSError as e:
+                # backend failure after the ok header went out: the stream
+                # grammar's abort frame is the only way to tell the client
+                send_stream_end(conn.sock, abort=True, error=str(e), kind="server")
+
+    def _op_write_blob_chunked(
+        self, conn: _Conn, req: dict[str, Any], payload: bytes
+    ) -> None:
+        """v2 chunked PUT.  Handshake: this request -> ready ack -> chunk
+        frames -> end frame (digest) -> commit response.  The ready ack is
+        the negotiation: a v1 server answers ``bad_op`` *before* the client
+        has streamed anything, so falling back costs one round trip, not one
+        blob.  Bytes append to a :class:`BlobWriter` (spill file on the FS
+        backend) — nothing is visible to ``exists``/``read_blob`` until the
+        folded digest checks out and the writer commits."""
+        name = self._check_name(conn, req)
+        if name is None:
+            return
+        key = req["key"]
+        try:
+            size = int(req["size"])
+        except (KeyError, TypeError, ValueError):
+            conn.send({"ok": False, "error": "bad or missing size", "kind": "bad_op"})
+            return
+        if size < 0 or size > MAX_PAYLOAD_BYTES:
+            conn.send({"ok": False, "error": f"size out of range: {size}", "kind": "bad_op"})
+            return
+        chunk_bytes = max(
+            1, min(int(req.get("chunk_bytes", DEFAULT_CHUNK_BYTES)), MAX_CHUNK_BYTES)
+        )
+        conn.send({"ok": True, "ready": True})
+        writer = self.backend.open_blob_writer(key, name)
+        committed = False
+        try:
+            buf = bytearray(chunk_bytes)
+            view = memoryview(buf)
+            sha = hashlib.sha256()
+            got = 0
+            while True:
+                header, n = recv_frame_into(conn.sock, view)
+                if header.get("end"):
+                    break
+                if got + n > size:
+                    # the peer lied about size; framing trust is gone
+                    raise ProtocolError(
+                        f"stream overran its announced {size} bytes"
+                    )
+                if n:
+                    sha.update(view[:n])
+                    writer.write(view[:n])
+                    got += n
+                    self._count_stream("chunks_in")
+            if header.get("abort"):
+                conn.send(
+                    {
+                        "ok": False,
+                        "error": header.get("error") or "client aborted stream",
+                        "kind": "aborted",
+                    }
+                )
+                return
+            if got != size:
+                conn.send(
+                    {
+                        "ok": False,
+                        "error": f"stream ended at {got} of {size} bytes",
+                        "kind": "protocol",
+                    }
+                )
+                return
+            folded = sha.hexdigest()
+            want = header.get("digest")
+            if want is not None and want != folded:
+                conn.send(
+                    {"ok": False, "error": "stream digest mismatch", "kind": "integrity"}
+                )
+                return
+            nbytes = writer.commit()
+            committed = True
+            self._record_digest(key, name, folded)
+            self._count_stream("streamed_writes")
+            conn.send({"ok": True, "nbytes": nbytes})
+        finally:
+            if not committed:
+                # torn stream, overrun, digest mismatch, backend error: the
+                # spill file is reclaimed and no partial blob ever landed
+                writer.abort()
+                self._count_stream("spill_aborts")
 
     def _op_delete(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
         key = req["key"]
         self.backend.delete(key)
+        self._forget_digests(key)
         conn.send({"ok": True})
         self._broadcast(
             {"event": "evicted", "key": key}, skip_client=req.get("client_id", "")
@@ -323,6 +539,88 @@ class StoreServer:
 
     def _op_nbytes(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
         conn.send({"ok": True, "nbytes": int(self.backend.nbytes(req["key"]))})
+
+    # -- v2: negotiation + batched small ops ----------------------------------
+    def _op_hello(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        conn.send(
+            {
+                "ok": True,
+                "proto": PROTO_VERSION,
+                "features": ["chunked", "batch"],
+            }
+        )
+
+    # only cheap presence/metadata probes may ride in a batch: a blob op in
+    # the middle of a coalesced round trip would re-serialize the data plane
+    # behind metadata traffic
+    _BATCH_SUBOPS = frozenset({"exists", "read_meta", "nbytes", "ping"})
+    # one read_meta result above this is returned as kind="too_large" instead
+    # of blowing the 1 MiB response-header cap when many ride together
+    _BATCH_META_BYTES = 256 << 10
+
+    def _op_batch(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        ops = req.get("ops")
+        if not isinstance(ops, list):
+            conn.send({"ok": False, "error": "batch needs an ops list", "kind": "bad_op"})
+            return
+        if len(ops) > MAX_BATCH_OPS:
+            conn.send(
+                {
+                    "ok": False,
+                    "error": f"batch of {len(ops)} exceeds {MAX_BATCH_OPS} sub-ops",
+                    "kind": "bad_op",
+                }
+            )
+            return
+        self._count_stream("batch_subops", len(ops))
+        results = []
+        budget = MAX_HEADER_BYTES - (64 << 10)  # response-header headroom
+        for sub in ops:
+            results.append(self._batch_one(sub, budget))
+            if results[-1].get("ok") and "text" in results[-1]:
+                budget -= len(results[-1]["text"])
+        conn.send({"ok": True, "results": results})
+
+    def _batch_one(self, sub: Any, budget: int) -> dict[str, Any]:
+        if not isinstance(sub, dict):
+            return {"ok": False, "error": "sub-op must be an object", "kind": "bad_op"}
+        op = sub.get("op", "")
+        if op not in self._BATCH_SUBOPS:
+            return {
+                "ok": False,
+                "error": f"op {op!r} not allowed in a batch",
+                "kind": "bad_op",
+            }
+        try:
+            if op == "ping":
+                return {"ok": True, "pong": True}
+            if op == "exists":
+                return {"ok": True, "exists": bool(self.backend.exists(sub["key"]))}
+            if op == "nbytes":
+                return {"ok": True, "nbytes": int(self.backend.nbytes(sub["key"]))}
+            # read_meta: the result rides inline in the response header, so
+            # oversized values must bounce (client retries them singularly)
+            name = sub.get("name")
+            if self._bad_name(name):
+                return {
+                    "ok": False,
+                    "error": f"illegal blob name {name!r}",
+                    "kind": "bad_name",
+                }
+            text = self.backend.read_meta(name)
+            if text is None:
+                return {"ok": True, "none": True}
+            if len(text) > min(self._BATCH_META_BYTES, max(budget, 0)):
+                return {
+                    "ok": False,
+                    "error": f"meta {name!r} too large for a batch response",
+                    "kind": "too_large",
+                }
+            return {"ok": True, "text": text}
+        except (KeyError, FileNotFoundError) as e:
+            return {"ok": False, "error": str(e), "kind": "not_found"}
+        except Exception as e:  # noqa: BLE001 - per-sub-op fault isolation
+            return {"ok": False, "error": f"{type(e).__name__}: {e}", "kind": "server"}
 
     # -- coordination ops ------------------------------------------------------
     def _op_lease_acquire(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
@@ -395,14 +693,17 @@ class StoreServer:
     def stats(self) -> dict[str, Any]:
         with self._counts_lock:
             counts = dict(self._counts)
+            streaming = dict(self._stream_counts)
         with self._lease_lock:
             n_leases = len(self._leases)
         with self._conns_lock:
             n_conns = len(self._conns)
             n_subs = sum(1 for c in self._conns if c.subscriber)
         return {
+            "proto": PROTO_VERSION,
             "requests": sum(counts.values()),
             "ops": counts,
+            "streaming": streaming,
             "active_leases": n_leases,
             "connections": n_conns,
             "subscribers": n_subs,

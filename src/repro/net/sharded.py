@@ -52,7 +52,7 @@ from typing import Any, Callable, Sequence
 
 from ..core.backends import BackendUnavailable, StorageBackend
 from .client import LeaseGrant, RemoteBackend
-from .protocol import IntegrityError, StoreUnreachable, parse_urls
+from .protocol import MAX_BATCH_OPS, IntegrityError, StoreUnreachable, parse_urls
 from .ring import HashRing
 
 
@@ -282,6 +282,53 @@ class ShardedBackend(StorageBackend):
             f"presence of {key!r} undecidable: {unreachable} replica(s) "
             f"unreachable, none of the reachable ones hold it"
         ) from last
+
+    def exists_many(self, keys: "Sequence[str]") -> dict[str, "bool | None"]:
+        """Batched presence probe across the cluster: group every key's
+        replica set by node, send **at most one ``batch`` request per
+        involved shard**, and merge with ``exists``'s exact semantics —
+        ``True`` on any replica's yes; ``False`` only when every replica of
+        the key was reachable and said no; ``None`` (undecidable) otherwise.
+        Unlike :meth:`exists` this never raises for an undecidable key — a
+        deep probe walk must report what it *can* decide in one round."""
+        keys = list(dict.fromkeys(keys))
+        if not keys:
+            return {}
+        node_keys: dict[str, list[str]] = {}
+        unreachable: dict[str, int] = {k: 0 for k in keys}
+        votes: dict[str, list[bool]] = {k: [] for k in keys}
+        for k in keys:
+            to_try, skipped = self._candidates(self._replicas(k))
+            unreachable[k] = skipped
+            for node in to_try:
+                node_keys.setdefault(node, []).append(k)
+        for node, ks in node_keys.items():
+            shard = self._shards[node]
+            results: list[dict[str, Any]] = []
+            try:
+                for start in range(0, len(ks), MAX_BATCH_OPS):
+                    group = ks[start : start + MAX_BATCH_OPS]
+                    results.extend(shard.batch([{"op": "exists", "key": k} for k in group]))
+            except BackendUnavailable:
+                self._mark_down(node)
+                for k in ks:
+                    unreachable[k] += 1
+                continue
+            self._mark_up(node)
+            for k, r in zip(ks, results):
+                if r.get("ok"):
+                    votes[k].append(bool(r.get("exists")))
+                else:
+                    unreachable[k] += 1
+        out: dict[str, bool | None] = {}
+        for k in keys:
+            if any(votes[k]):
+                out[k] = True
+            elif unreachable[k] == 0:
+                out[k] = False
+            else:
+                out[k] = None
+        return out
 
     def nbytes(self, key: str) -> int:
         to_try, _ = self._candidates(self._replicas(key))

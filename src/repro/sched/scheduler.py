@@ -186,18 +186,29 @@ class DagScheduler:
         }
         # only prefixes that name an actual chain node are storable; fan-in
         # path prefixes must not linger in policy bookkeeping as "stored"
+        non_chain: list[str] = []
         for prefix in rec.store:
             key = prefix.key(with_state)
             if key in chain_keys:
                 with self._pending_lock:
                     self._pending_stores.add(key)
-            elif self.store.has_state(key) == "absent":
+            else:
+                non_chain.append(key)
+
+        # every presence question this plan needs — each node's chain-prefix
+        # loadability plus the non-chain bookkeeping probes — in ONE batched
+        # round trip to the pool instead of one per node
+        states = self.store.has_state_many(
+            [p.key(with_state) for p in chain_prefix.values() if p is not None]
+            + non_chain
+        )
+        for key in non_chain:
+            if states.get(key) == "absent":
                 # authoritative absence only: an unreachable artifact keeps
                 # its bookkeeping (shard death is not eviction)
                 self.policy.stored.pop(key, None)
-
         loadable = {
-            n: p is not None and self.store.has(p.key(with_state))
+            n: p is not None and states.get(p.key(with_state)) == "present"
             for n, p in chain_prefix.items()
         }
         sinks = set(dag.sinks())

@@ -1,0 +1,333 @@
+"""Property/fuzz tests for the wire protocol (ISSUE 6 satellite).
+
+Two families:
+
+* **round-trip** — any JSON-object header and any payload (0 bytes, chunk
+  boundaries ±1, multi-chunk) must survive ``send_* -> recv_*`` bit-exact,
+  one-shot and chunked alike;
+* **adversarial bytes** — malformed, truncated, and oversized-length-prefix
+  frames must raise *typed* errors (``ProtocolError``/``ConnectionClosed``)
+  promptly, never hang waiting for bytes that cannot come and never allocate
+  a buffer an attacker named in a length prefix.
+
+Property tests run under hypothesis when installed and skip cleanly when not
+(see ``tests/_hypothesis_compat.py``); the example-based edge cases below
+them always run.
+"""
+import socket
+import struct
+import threading
+
+import pytest
+
+from repro.net import protocol as P
+from tests._hypothesis_compat import HealthCheck, given, settings, st
+
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(5)
+    b.settimeout(5)
+    return a, b
+
+
+def _roundtrip_frame(header, payload):
+    a, b = _pair()
+    try:
+        P.send_frame(a, header, payload)
+        got_header, got_payload = P.recv_frame(b)
+        return got_header, got_payload
+    finally:
+        a.close()
+        b.close()
+
+
+def _roundtrip_stream(data, chunk_bytes):
+    """Stream ``data`` through a socketpair with a sender thread (streams can
+    exceed the kernel socket buffer, so one thread cannot do both ends)."""
+    a, b = _pair()
+    sent: dict = {}
+
+    def send():
+        try:
+            sent["digest"] = P.send_blob_stream(a, data, chunk_bytes)
+        finally:
+            a.close()
+
+    t = threading.Thread(target=send, daemon=True)
+    t.start()
+    try:
+        buf, folded, end = P.recv_blob_stream(b, len(data))
+    finally:
+        b.close()
+        t.join(timeout=5)
+    return bytes(buf), folded, end, sent.get("digest")
+
+
+# -- property tests (hypothesis) ----------------------------------------------
+_json_scalars = st.one_of(
+    st.none(),
+    st.booleans(),
+    st.integers(min_value=-(2**53), max_value=2**53),
+    st.text(max_size=40),
+)
+
+
+@settings(max_examples=50, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    header=st.dictionaries(st.text(max_size=20), _json_scalars, max_size=8),
+    payload=st.binary(max_size=8192),
+)
+def test_frame_roundtrip_property(header, payload):
+    got_header, got_payload = _roundtrip_frame(header, payload)
+    assert got_header == header
+    assert got_payload == payload
+
+
+@settings(max_examples=25, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(
+    size=st.integers(min_value=0, max_value=5000),
+    chunk_bytes=st.integers(min_value=1, max_value=1024),
+)
+def test_stream_roundtrip_property(size, chunk_bytes):
+    data = bytes(i % 251 for i in range(size))
+    buf, folded, end, declared = _roundtrip_stream(data, chunk_bytes)
+    assert buf == data
+    assert folded == declared == end["digest"] == P.digest(data)
+
+
+@settings(max_examples=50, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(junk=st.binary(min_size=0, max_size=64))
+def test_truncated_frames_raise_typed_errors(junk):
+    """Any byte prefix shorter than a full frame must end in ConnectionClosed
+    (empty) or ProtocolError (partial) — never a hang, never a crash."""
+    a, b = _pair()
+    try:
+        a.sendall(junk)
+        a.close()
+        with pytest.raises(P.ProtocolError):  # ConnectionClosed subclasses it
+            while True:
+                P.recv_frame(b)
+    finally:
+        b.close()
+
+
+# -- example-based edge cases --------------------------------------------------
+def test_frame_roundtrip_zero_and_boundaries():
+    for n in (0, 1, P.DEFAULT_CHUNK_BYTES // 1024):
+        header, payload = _roundtrip_frame({"op": "x", "n": n}, b"q" * n)
+        assert header == {"op": "x", "n": n}
+        assert payload == b"q" * n
+
+
+@pytest.mark.parametrize("delta", [-1, 0, 1])
+def test_stream_chunk_boundary_plus_minus_one(delta):
+    chunk = 1024
+    for chunks in (1, 3):
+        size = chunks * chunk + delta
+        data = bytes(i % 256 for i in range(size))
+        buf, folded, end, declared = _roundtrip_stream(data, chunk)
+        assert buf == data
+        assert folded == declared
+
+
+def test_stream_overlapped_fold_matches_inline():
+    """The worker-thread fold (multi-core receive path) must produce the
+    same digest as the inline fold, including on torn/aborted streams."""
+    data = bytes(i % 256 for i in range(3 * 1024 + 1))
+    for overlap in (True, False):
+        a, b = _pair()
+        sent: dict = {}
+
+        def send():
+            try:
+                sent["digest"] = P.send_blob_stream(a, data, 1024)
+            finally:
+                a.close()
+
+        t = threading.Thread(target=send, daemon=True)
+        t.start()
+        try:
+            buf, folded, end = P.recv_blob_stream(
+                b, len(data), overlap_fold=overlap
+            )
+        finally:
+            b.close()
+            t.join(timeout=5)
+        assert bytes(buf) == data
+        assert folded == sent["digest"] == P.digest(data)
+
+
+def test_stream_overlapped_fold_cleans_up_on_error():
+    """A truncated stream must not leak the folder's worker thread."""
+    import threading as _threading
+
+    a, b = _pair()
+    a.sendall(struct.pack(">IQ", len(b'{"c":1}'), 100) + b'{"c":1}' + b"y" * 40)
+    a.close()
+    before = _threading.active_count()
+    try:
+        with pytest.raises(P.ProtocolError):
+            P.recv_blob_stream(b, 100, overlap_fold=True)
+    finally:
+        b.close()
+    assert _threading.active_count() <= before
+
+
+def test_zero_byte_stream():
+    buf, folded, end, declared = _roundtrip_stream(b"", 1024)
+    assert buf == b""
+    assert folded == declared == P.digest(b"")
+
+
+def test_clean_eof_is_connection_closed():
+    a, b = _pair()
+    a.close()
+    try:
+        with pytest.raises(P.ConnectionClosed):
+            P.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_eof_inside_prefix_is_protocol_error_not_closed():
+    a, b = _pair()
+    a.sendall(b"\x00\x00")  # 2 of the 12 prefix bytes
+    a.close()
+    try:
+        with pytest.raises(P.ProtocolError) as ei:
+            P.recv_frame(b)
+        assert not isinstance(ei.value, P.ConnectionClosed)
+    finally:
+        b.close()
+
+
+def test_oversized_header_length_prefix_rejected_without_allocation():
+    """A hostile length prefix must be rejected from the 12 prefix bytes
+    alone — the receiver must never try to allocate or await the bytes."""
+    a, b = _pair()
+    a.sendall(struct.pack(">IQ", P.MAX_HEADER_BYTES + 1, 0))
+    try:
+        with pytest.raises(P.ProtocolError, match="out of range"):
+            P.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_oversized_payload_length_prefix_rejected():
+    a, b = _pair()
+    a.sendall(struct.pack(">IQ", 2, P.MAX_PAYLOAD_BYTES + 1) + b"{}")
+    try:
+        with pytest.raises(P.ProtocolError, match="out of range"):
+            P.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_unparseable_header_is_protocol_error():
+    a, b = _pair()
+    bad = b"not json!"
+    a.sendall(struct.pack(">IQ", len(bad), 0) + bad)
+    try:
+        with pytest.raises(P.ProtocolError, match="unparseable"):
+            P.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_non_object_header_is_protocol_error():
+    a, b = _pair()
+    bad = b"[1,2,3]"
+    a.sendall(struct.pack(">IQ", len(bad), 0) + bad)
+    try:
+        with pytest.raises(P.ProtocolError, match="must be an object"):
+            P.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_recv_frame_into_rejects_payload_beyond_window():
+    """A stream receiver's bounded buffer is the memory ceiling: a chunk
+    bigger than the remaining window must be refused, not grown into."""
+    a, b = _pair()
+    P.send_frame(a, {"c": 1}, b"x" * 100)
+    try:
+        buf = bytearray(10)
+        with pytest.raises(P.ProtocolError, match="receive window"):
+            P.recv_frame_into(b, memoryview(buf))
+    finally:
+        a.close()
+        b.close()
+
+
+def test_send_chunk_rejects_oversize():
+    a, b = _pair()
+    try:
+        with pytest.raises(P.ProtocolError, match="MAX_CHUNK_BYTES"):
+            # a lying length is enough — no giant buffer needed
+            P.send_chunk_prefix(a, P.MAX_CHUNK_BYTES + 1)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_stream_ended_early_is_protocol_error():
+    a, b = _pair()
+    P.send_chunk(a, b"x" * 10)
+    P.send_stream_end(a, digest_hex=P.digest(b"x" * 10))
+    try:
+        with pytest.raises(P.ProtocolError, match="ended early"):
+            P.recv_blob_stream(b, 20)  # announced 20, sent 10
+    finally:
+        a.close()
+        b.close()
+
+
+def test_stream_overrun_is_protocol_error():
+    a, b = _pair()
+    P.send_chunk(a, b"x" * 30)  # announced 20, sent 30
+    try:
+        with pytest.raises(P.ProtocolError):
+            P.recv_blob_stream(b, 20)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_stream_abort_frame_surfaces_to_caller():
+    a, b = _pair()
+    P.send_chunk(a, b"x" * 5)
+    P.send_stream_end(a, abort=True, error="disk on fire", kind="server")
+    try:
+        buf, folded, end = P.recv_blob_stream(b, 20)
+        assert end.get("abort")
+        assert end.get("error") == "disk on fire"
+    finally:
+        a.close()
+        b.close()
+
+
+def test_torn_stream_mid_chunk_is_protocol_error():
+    a, b = _pair()
+    # frame prefix promises 100 payload bytes; only 40 arrive before EOF
+    a.sendall(struct.pack(">IQ", len(b'{"c":1}'), 100) + b'{"c":1}' + b"y" * 40)
+    a.close()
+    try:
+        with pytest.raises(P.ProtocolError, match="truncated"):
+            P.recv_blob_stream(b, 100)
+    finally:
+        b.close()
+
+
+def test_header_too_large_to_send():
+    a, b = _pair()
+    try:
+        with pytest.raises(P.ProtocolError, match="header too large"):
+            P.send_frame(a, {"k": "v" * (P.MAX_HEADER_BYTES + 1)})
+    finally:
+        a.close()
+        b.close()

@@ -1,0 +1,413 @@
+"""Streaming data plane: fault injection, op-count regressions, cache guard.
+
+The ISSUE 6 satellite contract:
+
+* **torn streams** — a peer killed mid-chunked-put or mid-chunked-get must
+  never leave a partial blob visible to ``exists``/``get``, the server must
+  reclaim its spill file, and ``RemoteBackend``'s reconnect-and-retry must
+  complete the op against a restarted server;
+* **op counts** — a depth-d reuse-probe walk issues O(1) batched round
+  trips (was O(d)), and ``ShardedBackend``'s batch fan-out sends at most
+  one request per involved shard — both asserted against ``server_stats``
+  counters, not wall-clock;
+* **cache guard** — ``CachingBackend`` refuses to cache any single blob
+  larger than ``max_entry_fraction`` of its capacity, so one huge artifact
+  cannot evict the entire hot set.
+"""
+import pathlib
+import socket
+import time
+
+import pytest
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IntermediateStore, LocalFSBackend, MemoryBackend, TSAR
+from repro.core.executor import probe_reusable_prefix
+from repro.core.workflow import ModuleRef, PrefixKey
+from repro.net import (
+    CachingBackend,
+    IntegrityError,
+    PROTO_VERSION,
+    RemoteBackend,
+    ShardedBackend,
+    StoreServer,
+)
+from repro.net import protocol as P
+
+
+@pytest.fixture()
+def server(tmp_path):
+    srv = StoreServer(LocalFSBackend(tmp_path / "pool")).start()
+    yield srv
+    srv.stop()
+
+
+def _fast_backend(url, **kw):
+    kw.setdefault("retries", 2)
+    kw.setdefault("retry_backoff_s", 0.01)
+    kw.setdefault("stream_threshold", 4096)
+    kw.setdefault("chunk_bytes", 8192)
+    return RemoteBackend(url, **kw)
+
+
+def _spill_leftovers(pool_root):
+    """Any dot-tmp spill file the server failed to reclaim."""
+    root = pathlib.Path(pool_root)
+    return [p for p in root.rglob("*") if p.name.startswith(".") and ".tmp." in p.name]
+
+
+# -- chunked transfer end-to-end ----------------------------------------------
+def test_chunked_put_get_roundtrip(server):
+    rb = _fast_backend(server.url)
+    try:
+        big = bytes(bytearray(range(256)) * 300)  # ~75 KiB, many chunks
+        assert rb.write_blob("k", "big.bin", big) == len(big)
+        assert rb.read_blob("k", "big.bin") == big
+        assert rb.streamed_writes == 1
+        assert rb.streamed_reads == 1
+        st = rb.server_stats()
+        assert st["proto"] == PROTO_VERSION
+        assert st["streaming"]["streamed_writes"] == 1
+        assert st["streaming"]["chunks_in"] >= 9
+    finally:
+        rb.close()
+
+
+def test_small_blobs_stay_one_shot(server):
+    rb = _fast_backend(server.url)
+    try:
+        rb.write_blob("k", "small.bin", b"tiny")
+        assert rb.read_blob("k", "small.bin") == b"tiny"
+        assert rb.streamed_writes == 0
+        assert rb.streamed_reads == 0
+    finally:
+        rb.close()
+
+
+def test_chunked_get_after_server_restart_no_sidecar(tmp_path):
+    """A restarted server has an empty digest sidecar: the first chunked
+    read folds server-side and repopulates it; the second can zero-copy."""
+    srv = StoreServer(LocalFSBackend(tmp_path / "pool")).start()
+    port = srv.port
+    rb = _fast_backend(srv.url, retries=6)
+    try:
+        big = b"\xab" * 50_000
+        rb.write_blob("k", "b.bin", big)
+        srv.stop()
+        srv = StoreServer(LocalFSBackend(tmp_path / "pool"), port=port).start()
+        assert rb.read_blob("k", "b.bin") == big  # fold-and-record pass
+        assert rb.read_blob("k", "b.bin") == big  # sidecar (sendfile) pass
+        assert rb.server_stats()["streaming"].get("sendfile_reads", 0) >= 1
+    finally:
+        rb.close()
+        srv.stop()
+
+
+# -- fault injection: torn streams --------------------------------------------
+def test_torn_chunked_put_leaves_no_partial(server, tmp_path):
+    """Kill the client mid-chunked-put: nothing visible, spill reclaimed."""
+    raw = socket.create_connection((server.host, server.port), timeout=5)
+    P.send_frame(
+        raw,
+        {"op": "write_blob_chunked", "key": "torn", "name": "manifest.json",
+         "size": 1 << 20, "chunk_bytes": 1 << 14},
+    )
+    ack, _ = P.recv_frame(raw)
+    assert ack.get("ready")
+    P.send_chunk(raw, b"x" * (1 << 14))  # one chunk of 64, then die
+    raw.close()
+
+    rb = _fast_backend(server.url)
+    try:
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            if server.stats()["streaming"].get("spill_aborts", 0) >= 1:
+                break
+            time.sleep(0.02)
+        assert server.stats()["streaming"].get("spill_aborts", 0) >= 1
+        assert rb.exists("torn") is False
+        with pytest.raises(KeyError):
+            rb.read_blob("torn", "manifest.json")
+        assert _spill_leftovers(tmp_path / "pool") == []
+        # the same op, completed by a healthy client, lands fine afterwards
+        rb.write_blob("torn", "manifest.json", b"{}" * 40000)
+        assert rb.exists("torn") is True
+    finally:
+        rb.close()
+
+
+def test_torn_chunked_get_does_not_wedge_server(server):
+    rb = _fast_backend(server.url)
+    try:
+        big = b"\xcd" * 120_000
+        rb.write_blob("k", "b.bin", big)
+        # hand-roll a chunked GET and vanish after the first chunk
+        raw = socket.create_connection((server.host, server.port), timeout=5)
+        P.send_frame(
+            raw,
+            {"op": "read_blob", "key": "k", "name": "b.bin",
+             "accept_chunked": True, "stream_min_bytes": 1, "chunk_bytes": 4096},
+        )
+        resp, _ = P.recv_frame(raw)
+        assert resp.get("chunked") and resp["size"] == len(big)
+        buf = bytearray(4096)
+        P.recv_frame_into(raw, memoryview(buf))  # take one chunk…
+        raw.close()  # …and die with ~29 more in flight
+        # the server must shrug it off and keep serving everyone else
+        assert rb.ping()
+        assert rb.read_blob("k", "b.bin") == big
+    finally:
+        rb.close()
+
+
+def test_abort_end_frame_discards_stream(server, tmp_path):
+    """A client can abort its own put cleanly; the server must discard."""
+    raw = socket.create_connection((server.host, server.port), timeout=5)
+    P.send_frame(
+        raw,
+        {"op": "write_blob_chunked", "key": "ab", "name": "manifest.json",
+         "size": 1 << 16, "chunk_bytes": 1 << 14},
+    )
+    ack, _ = P.recv_frame(raw)
+    assert ack.get("ready")
+    P.send_chunk(raw, b"y" * (1 << 14))
+    P.send_stream_end(raw, abort=True, error="caller changed its mind", kind="client")
+    resp, _ = P.recv_frame(raw)
+    assert not resp["ok"] and resp["kind"] == "aborted"
+    raw.close()
+    rb = _fast_backend(server.url)
+    try:
+        assert rb.exists("ab") is False
+        assert _spill_leftovers(tmp_path / "pool") == []
+    finally:
+        rb.close()
+
+
+def test_chunked_put_digest_mismatch_rejected(server):
+    raw = socket.create_connection((server.host, server.port), timeout=5)
+    data = b"z" * 9000
+    P.send_frame(
+        raw,
+        {"op": "write_blob_chunked", "key": "bad", "name": "manifest.json",
+         "size": len(data), "chunk_bytes": 4096},
+    )
+    ack, _ = P.recv_frame(raw)
+    assert ack.get("ready")
+    for off in range(0, len(data), 4096):
+        P.send_chunk(raw, data[off : off + 4096])
+    P.send_stream_end(raw, digest_hex="0" * 64)  # lie about the digest
+    resp, _ = P.recv_frame(raw)
+    assert not resp["ok"] and resp["kind"] == "integrity"
+    raw.close()
+    rb = _fast_backend(server.url)
+    try:
+        assert rb.exists("bad") is False
+    finally:
+        rb.close()
+
+
+def test_server_restart_mid_streaming_ops_retries_complete(tmp_path):
+    """RemoteBackend's reconnect-and-retry covers the chunked paths too:
+    a whole torn stream replays on a fresh socket against the new server."""
+    srv = StoreServer(LocalFSBackend(tmp_path / "pool")).start()
+    port = srv.port
+    rb = _fast_backend(srv.url, retries=6, retry_backoff_s=0.05)
+    try:
+        big = bytes(bytearray(range(256)) * 400)
+        rb.write_blob("k", "manifest.json", big)
+        srv.stop()
+        srv = StoreServer(LocalFSBackend(tmp_path / "pool"), port=port).start()
+        assert rb.read_blob("k", "manifest.json") == big  # chunked read, retried
+        rb.write_blob("k2", "manifest.json", big)  # chunked write, fresh epoch
+        assert rb.exists("k2")
+        assert rb.reconnects > 0
+        assert rb.streamed_reads >= 1 and rb.streamed_writes >= 2
+    finally:
+        rb.close()
+        srv.stop()
+
+
+# -- op-count regressions ------------------------------------------------------
+def _chain(depth, dataset="ds"):
+    mods = tuple(ModuleRef(f"m{i}") for i in range(depth))
+    return PrefixKey(dataset, mods)
+
+
+def test_probe_walk_is_one_round_trip(server):
+    """Depth-8 probe walk: one ``batch`` request, zero singular ``exists``."""
+    rb = _fast_backend(server.url)
+    try:
+        store = IntermediateStore(backend=rb)
+        policy = TSAR()
+        before = rb.server_stats()["ops"]
+        prefix, value, _ = probe_reusable_prefix(store, policy, _chain(8))
+        after = rb.server_stats()["ops"]
+        assert prefix is None and value is None
+        assert after.get("batch", 0) - before.get("batch", 0) == 1
+        assert after.get("exists", 0) == before.get("exists", 0)
+        # total round trips for the whole walk: the one batch (+ the stats
+        # request that read ``after`` itself)
+        delta_requests = sum(after.values()) - sum(before.values())
+        assert delta_requests == 2
+    finally:
+        rb.close()
+
+
+def test_probe_walk_loads_deepest_present(server):
+    rb = _fast_backend(server.url)
+    try:
+        store = IntermediateStore(backend=rb)
+        policy = TSAR()
+        chain = _chain(8)
+        hit = chain.parent().parent()  # depth 6
+        store.put(hit.key(policy.with_state), jnp.arange(16.0))
+        before = rb.server_stats()["ops"]
+        prefix, value, _ = probe_reusable_prefix(store, policy, chain)
+        after = rb.server_stats()["ops"]
+        assert prefix == hit
+        np.testing.assert_array_equal(np.asarray(value), np.arange(16.0))
+        assert after.get("batch", 0) - before.get("batch", 0) == 1
+        assert after.get("exists", 0) == before.get("exists", 0)
+    finally:
+        rb.close()
+
+
+def test_has_state_many_matches_has_state(server):
+    rb = _fast_backend(server.url)
+    try:
+        store = IntermediateStore(backend=rb)
+        store.put("alive", jnp.arange(4.0))
+        states = store.has_state_many(["alive", "ghost-a", "ghost-b"])
+        assert states == {
+            "alive": "present",
+            "ghost-a": "absent",
+            "ghost-b": "absent",
+        }
+        for k, want in states.items():
+            assert store.has_state(k) == want
+    finally:
+        rb.close()
+
+
+def test_sharded_batch_at_most_one_request_per_shard(tmp_path):
+    servers = [
+        StoreServer(LocalFSBackend(tmp_path / f"pool{i}")).start() for i in range(3)
+    ]
+    sb = ShardedBackend(
+        ",".join(f"127.0.0.1:{s.port}" for s in servers),
+        replication=2,
+        retries=1,
+        retry_backoff_s=0.01,
+    )
+    try:
+        keys = [f"key-{i}" for i in range(24)]
+        sb.write_blob(keys[0], "manifest.json", b"{}")
+        before = {s.port: s.stats()["ops"].get("batch", 0) for s in servers}
+        out = sb.exists_many(keys)
+        after = {s.port: s.stats()["ops"].get("batch", 0) for s in servers}
+        assert out[keys[0]] is True
+        assert all(out[k] is False for k in keys[1:])
+        for port in before:
+            assert after[port] - before[port] <= 1  # ≤ one request per shard
+        assert sum(after.values()) - sum(before.values()) >= 1
+    finally:
+        sb.close()
+        for s in servers:
+            s.stop()
+
+
+def test_sharded_exists_many_undecidable_is_none(tmp_path):
+    """With a dead shard, keys whose full replica set is unreachable come
+    back ``None`` (undecidable) — never a false ``False``."""
+    servers = [
+        StoreServer(LocalFSBackend(tmp_path / f"pool{i}")).start() for i in range(2)
+    ]
+    sb = ShardedBackend(
+        ",".join(f"127.0.0.1:{s.port}" for s in servers),
+        replication=1,  # one replica: a dead shard makes its keys undecidable
+        retries=0,
+        retry_backoff_s=0.01,
+    )
+    try:
+        keys = [f"k{i}" for i in range(16)]
+        dead = servers[1]
+        dead_node = f"127.0.0.1:{dead.port}"
+        dead_keys = [k for k in keys if sb.shard_for(k) == dead_node]
+        assert dead_keys, "hash ring should land some keys on each shard"
+        dead.stop()
+        out = sb.exists_many(keys)
+        for k in keys:
+            assert out[k] is (None if k in dead_keys else False)
+    finally:
+        sb.close()
+        servers[0].stop()
+
+
+def test_remote_exists_many_unreachable_is_none():
+    rb = RemoteBackend("tcp://127.0.0.1:1", retries=0, retry_backoff_s=0.01)
+    try:
+        assert rb.exists_many(["a", "b"]) == {"a": None, "b": None}
+    finally:
+        rb.close()
+
+
+def test_batch_falls_back_to_pipelining_on_v1_server(server, monkeypatch):
+    """Against a server without the batch op the client pipelines the sub-ops
+    on one socket — and remembers, so it never re-probes."""
+    rb = _fast_backend(server.url)
+    try:
+        monkeypatch.delattr(StoreServer, "_op_batch")
+        rb.write_blob("k", "manifest.json", b"{}")
+        out = rb.exists_many(["k", "ghost"])
+        assert out == {"k": True, "ghost": False}
+        assert rb._server_proto == 1
+        st = rb.server_stats()
+        assert st["ops"].get("exists", 0) >= 2  # pipelined singular ops
+    finally:
+        rb.close()
+
+
+def test_chunked_write_falls_back_on_v1_server(server, monkeypatch):
+    rb = _fast_backend(server.url)
+    try:
+        monkeypatch.delattr(StoreServer, "_op_write_blob_chunked")
+        big = b"\x77" * 50_000
+        rb.write_blob("k", "b.bin", big)
+        assert rb.read_blob("k", "b.bin") == big
+        assert rb.streamed_writes == 0
+        assert rb._server_proto == 1
+    finally:
+        rb.close()
+
+
+# -- CachingBackend oversize guard (satellite fix) -----------------------------
+def test_cache_rejects_oversize_entry():
+    inner = MemoryBackend()
+    cache = CachingBackend(inner, capacity_bytes=1000, max_entry_fraction=0.25)
+    # populate a hot set of small blobs
+    for i in range(3):
+        cache.write_blob(f"k{i}", "b", bytes([i]) * 200)
+    hot = cache.cached_bytes
+    assert hot == 600
+    # a blob over 25% of capacity must pass through uncached…
+    cache.write_blob("huge", "b", b"\xff" * 600)
+    assert cache.oversize_rejected == 1
+    assert cache.cached_bytes == hot  # …without evicting the hot set
+    # and reading it back stays uncached but correct
+    assert cache.read_blob("huge", "b") == b"\xff" * 600
+    assert cache.oversize_rejected == 2
+    # the small hot set still serves from cache
+    misses = cache.misses
+    assert cache.read_blob("k0", "b") == b"\x00" * 200
+    assert cache.misses == misses and cache.hits >= 1
+
+
+def test_cache_default_fraction_allows_half():
+    cache = CachingBackend(MemoryBackend(), capacity_bytes=1000)
+    cache.write_blob("k", "b", b"x" * 500)  # exactly half: allowed
+    assert cache.oversize_rejected == 0
+    assert cache.cached_bytes == 500
+    with pytest.raises(ValueError):
+        CachingBackend(MemoryBackend(), capacity_bytes=10, max_entry_fraction=0.0)
