@@ -1,0 +1,213 @@
+"""Gateway benchmark: sustained concurrent HTTP submissions, cross-tenant
+reuse on the shared namespace, and backpressure under saturation.
+
+Three rounds over a real loopback ``GatewayServer`` (threaded stdlib HTTP):
+
+  1. **Sustained throughput** — ``n_clients`` concurrent tenants each POST
+     ``n_requests`` synchronous (``wait=true``) submissions of distinct
+     per-tenant pipelines; reports submissions/sec and end-to-end p50/p99
+     latency per request.
+  2. **Cross-tenant reuse** — every tenant submits the *same* pipeline into
+     the shared namespace; after a warm-up the fabric serves the whole chain
+     from stored intermediates.  Reports the reuse-hit rate (fraction of
+     nodes skipped) and proves >= half of post-warm-up nodes were skipped.
+  3. **Saturation** — a burst far above ``max_pending`` against a 1-worker
+     service: asserts >=1 structured 429 AND that every accepted (202) run
+     reaches ``done`` — backpressure never drops admitted work.
+
+``--smoke`` shrinks counts for CI: it exists to catch gateway deadlocks and
+dropped-run regressions, not to measure.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import threading
+import time
+import urllib.error
+import urllib.request
+
+from repro.api import Client, WorkflowSpec
+from repro.gateway import GatewayServer, TokenAuthenticator
+from repro.gateway.serve import register_demo_modules
+
+
+def _post(base: str, token: str, body: dict, timeout: float = 60.0):
+    req = urllib.request.Request(base + "/v1/workflows", method="POST")
+    req.add_header("Authorization", f"Bearer {token}")
+    data = json.dumps(body).encode()
+    try:
+        with urllib.request.urlopen(req, data=data, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        raw = e.read()
+        return e.code, (json.loads(raw) if raw else {})
+
+
+def _get(base: str, token: str, path: str, timeout: float = 30.0):
+    req = urllib.request.Request(base + path)
+    req.add_header("Authorization", f"Bearer {token}")
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return resp.status, json.loads(resp.read())
+
+
+def _pct(values: list[float], q: float) -> float:
+    if not values:
+        return 0.0
+    values = sorted(values)
+    idx = min(len(values) - 1, int(round(q * (len(values) - 1))))
+    return values[idx]
+
+
+def _mk_gateway(tokens: dict[str, str], **client_kw) -> tuple[GatewayServer, Client]:
+    client = Client(**client_kw)
+    register_demo_modules(client.registry)
+
+    @client.module("work", ms=2.0, x=0)
+    def work(xs, ms=2.0, x=0):
+        # x only differentiates tool states (distinct PrefixKeys per step)
+        time.sleep(ms / 1000.0)
+        return [v + 1 for v in xs]
+
+    gw = GatewayServer(client, TokenAuthenticator(tokens))
+    gw.start()
+    return gw, client
+
+
+def run(smoke: bool = False) -> list[str]:
+    lines: list[str] = []
+    n_tenants = 2 if smoke else 4
+    n_requests = 8 if smoke else 40
+    tokens = {f"tok-{i}": f"tenant{i}" for i in range(n_tenants)}
+
+    # -- round 1: sustained concurrent submissions ---------------------------
+    gw, client = _mk_gateway(tokens, max_workers=4, max_pending=256)
+    try:
+        latencies: list[float] = []
+        lat_lock = threading.Lock()
+        chain = [("work", {"ms": 2.0}), ("work", {"ms": 2.0, "x": 1}),
+                 ("stats", None)]
+
+        def _tenant_load(token: str, idx: int) -> None:
+            # distinct datasets: this round measures raw submission
+            # machinery, not reuse
+            mine: list[float] = []
+            for i in range(n_requests):
+                spec = WorkflowSpec.from_steps(f"ds-{idx}-{i}", chain)
+                t0 = time.perf_counter()
+                st, doc = _post(gw.url, token,
+                                {"spec": spec.to_dict(), "data": [1.0, 2.0],
+                                 "wait": True})
+                dt = time.perf_counter() - t0
+                assert st == 200 and doc["status"] == "done", (st, doc)
+                mine.append(dt)
+            with lat_lock:
+                latencies.extend(mine)
+
+        t0 = time.perf_counter()
+        threads = [
+            threading.Thread(target=_tenant_load, args=(tok, i))
+            for i, tok in enumerate(tokens)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        total = n_tenants * n_requests
+        rps = total / wall
+        p50 = _pct(latencies, 0.50) * 1e3
+        p99 = _pct(latencies, 0.99) * 1e3
+        lines.append(
+            f"gateway_sustained,{wall * 1e6 / total:.1f},"
+            f"rps={rps:.1f} p50_ms={p50:.1f} p99_ms={p99:.1f} "
+            f"tenants={n_tenants} requests={total}"
+        )
+    finally:
+        gw.close()
+        client.close()
+
+    # -- round 2: cross-tenant reuse on the shared namespace -----------------
+    gw, client = _mk_gateway(tokens, max_workers=4, max_pending=256)
+    try:
+        slow_ms = 5.0 if smoke else 20.0
+        spec = WorkflowSpec.from_steps(
+            "corpus", [("work", {"ms": slow_ms}),
+                       ("work", {"ms": slow_ms, "x": 1}),
+                       ("work", {"ms": slow_ms, "x": 2})]
+        ).to_dict()
+        body = {"spec": spec, "data": [1.0], "namespace": "shared",
+                "wait": True}
+        warm = 3  # miner history + first persisted store
+        tok0 = next(iter(tokens))
+        for _ in range(warm):
+            st, doc = _post(gw.url, tok0, body)
+            assert st == 200, doc
+        nodes = skipped = 0
+        reps = 2 if smoke else 5
+        for _ in range(reps):
+            for tok in tokens:  # every tenant, same public prefix
+                st, doc = _post(gw.url, tok, body)
+                assert st == 200, doc
+                nodes += doc["result"]["n_nodes"]
+                skipped += doc["result"]["n_skipped"]
+        hit = skipped / nodes if nodes else 0.0
+        assert hit >= 0.5, (
+            f"cross-tenant shared-namespace reuse only hit {hit:.2%}"
+        )
+        lines.append(
+            f"gateway_shared_reuse,{0.0:.1f},"
+            f"reuse_hit={hit:.2%} nodes={nodes} tenants={n_tenants}"
+        )
+    finally:
+        gw.close()
+        client.close()
+
+    # -- round 3: saturation answers 429, loses nothing ----------------------
+    max_pending = 2 if smoke else 4
+    gw, client = _mk_gateway(
+        tokens, max_workers=1, max_concurrent_runs=1, max_pending=max_pending
+    )
+    try:
+        spec = WorkflowSpec.from_steps(
+            "sat", [("work", {"ms": 100.0})]
+        ).to_dict()
+        burst = max_pending * (3 if smoke else 6)
+        accepted: list[str] = []
+        n_429 = 0
+        for _ in range(burst):
+            st, doc = _post(gw.url, "tok-0", {"spec": spec, "data": [1.0]})
+            if st == 202:
+                accepted.append(doc["run_id"])
+            else:
+                assert st == 429, (st, doc)
+                n_429 += 1
+        assert n_429 >= 1, "saturation burst produced no 429s"
+        assert accepted, "saturation burst admitted nothing"
+        lost = 0
+        deadline = time.monotonic() + 120
+        for rid in accepted:
+            while True:
+                st, doc = _get(gw.url, "tok-0", f"/v1/runs/{rid}")
+                if doc["status"] in ("done", "failed"):
+                    lost += int(doc["status"] != "done")
+                    break
+                assert time.monotonic() < deadline, "accepted run stuck"
+                time.sleep(0.02)
+        assert lost == 0, f"{lost} accepted runs were dropped under saturation"
+        lines.append(
+            f"gateway_saturation,{0.0:.1f},"
+            f"burst={burst} accepted={len(accepted)} rejected_429={n_429} "
+            f"lost=0 max_pending={max_pending}"
+        )
+    finally:
+        gw.close()
+        client.close()
+
+    return lines
+
+
+if __name__ == "__main__":
+    import sys
+
+    print("\n".join(run(smoke="--smoke" in sys.argv)))

@@ -11,6 +11,7 @@ def main() -> None:
         bench_adaptive_risp,
         bench_dag_scheduler,
         bench_eviction,
+        bench_gateway,
         bench_prefix_cache,
         bench_recommend,
         bench_remote_store,
@@ -34,6 +35,7 @@ def main() -> None:
         ("remote_store (repro.net cross-process pool)", bench_remote_store.run),
         ("sharded_store (repro.net cluster: shards + replication)", bench_sharded_store.run),
         ("streaming (wire v2: chunked transfer + batched probes)", bench_streaming.run),
+        ("gateway (HTTP front door: tenants, reuse, backpressure)", bench_gateway.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

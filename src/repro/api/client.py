@@ -37,7 +37,7 @@ from ..sched.service import WorkflowService
 from ..sched.singleflight import SingleFlight
 from ..sched.stats import AggregateStats
 from .recommend import RecommendReport, Recommender
-from .spec import WorkflowSpec
+from .spec import WorkflowSpec, check_namespace, namespaced_dataset
 
 
 class Client:
@@ -79,6 +79,16 @@ class Client:
     dispatcher: optional ``repro.sched.ProcessPoolDispatcher`` — module
         computes escape onto worker processes (the caller owns its
         lifecycle).
+    namespace: default artifact namespace.  Specs that don't carry their own
+        namespace are rebound to this one before resolving ``PrefixKey``s, so
+        everything this client stores lives under
+        ``<namespace>/<dataset_id>`` — the isolation unit the gateway maps
+        tenants onto.  Empty (the default) keeps the legacy un-namespaced
+        keys.
+    max_pending: bound on scheduler submissions in flight (queued + running);
+        when saturated, ``submit`` raises
+        :class:`~repro.sched.service.AdmissionRejected` instead of queueing
+        unboundedly.  ``None`` (default) keeps the unbounded legacy behavior.
     """
 
     def __init__(
@@ -101,7 +111,10 @@ class Client:
         client_id: str | None = None,
         replication: int | None = None,
         dispatcher: "NodeDispatcher | None" = None,
+        namespace: str = "",
+        max_pending: int | None = None,
     ) -> None:
+        self.namespace = check_namespace(namespace)
         self._remote: "RemoteBackend | ShardedBackend | None" = None
         singleflight: "SingleFlight | None" = None
         if store_url is None and replication is not None:
@@ -193,6 +206,7 @@ class Client:
             max_concurrent_runs=max_concurrent_runs,
             singleflight=singleflight,
             dispatcher=dispatcher,
+            max_pending=max_pending,
         )
         self.recommender = Recommender(policy, store)
         # client-level aggregate stats spanning BOTH engines (the service's
@@ -201,6 +215,14 @@ class Client:
         self._agg = AggregateStats()
         self._t_first: float | None = None
         self._t_last = 0.0
+        self._closed = False
+
+    def _bind_namespace(self, spec: WorkflowSpec) -> WorkflowSpec:
+        """Apply the client's default namespace to specs that carry none
+        (a spec's own namespace always wins)."""
+        if self.namespace and not spec.namespace:
+            return spec.with_namespace(self.namespace)
+        return spec
 
     # -- registration ----------------------------------------------------------
     def module(
@@ -253,6 +275,7 @@ class Client:
         Either way the artifacts land under the same ``PrefixKey``s."""
         self._mark_start()
         if isinstance(spec, WorkflowSpec):
+            spec = self._bind_namespace(spec)
             if spec.is_linear:
                 runnable: Workflow | DagWorkflow = spec.to_workflow(self.registry)
             else:
@@ -276,17 +299,21 @@ class Client:
         self,
         spec: WorkflowSpec | Workflow | DagWorkflow,
         data: Any,
+        on_state: Callable[[str], None] | None = None,
     ) -> "Future[DagRunResult]":
         """Non-blocking submission onto the shared scheduler (chains run as
-        chain DAGs).  Returns the run's future."""
+        chain DAGs).  Returns the run's future.  ``on_state`` (if given) is
+        forwarded to :meth:`WorkflowService.submit` — it fires with
+        ``"started"`` when a coordinator picks the run up and
+        ``"finished"``/``"failed"`` when it completes."""
         self._mark_start()
         if isinstance(spec, WorkflowSpec):
-            dag = spec.to_dag(self.registry)
+            dag = self._bind_namespace(spec).to_dag(self.registry)
         elif isinstance(spec, Workflow):
             dag = DagWorkflow.from_workflow(spec, registry=self.registry)
         else:
             dag = spec
-        fut = self.service.submit(dag, data)
+        fut = self.service.submit(dag, data, on_state=on_state)
 
         def _done(f: "Future[DagRunResult]") -> None:
             try:
@@ -320,7 +347,7 @@ class Client:
         """
         if isinstance(wf, WorkflowSpec):
             rec = self.policy.step_paths(
-                wf.to_dag(self.registry, strict=False).paths()
+                self._bind_namespace(wf).to_dag(self.registry, strict=False).paths()
             )
         else:
             rec = self.policy.step(wf)
@@ -356,11 +383,15 @@ class Client:
         next-module suggestions mined from the observed corpus.
         """
         if isinstance(partial, str):
-            dataset_id, chain = partial, tuple(modules)
+            # bare dataset ids are composed with the client's default
+            # namespace (pass an already-composed id to escape)
+            dataset_id = namespaced_dataset(self.namespace, partial)
+            chain = tuple(modules)
         elif isinstance(partial, Workflow):
             dataset_id, chain = partial.dataset_id, partial.modules
         else:
-            dataset_id = partial.dataset_id
+            partial = self._bind_namespace(partial)
+            dataset_id = partial.effective_dataset_id
             if len(partial) == 0:
                 chain = ()
             else:
@@ -385,6 +416,13 @@ class Client:
         self.service.drain(timeout)
 
     def close(self) -> None:
+        """Idempotent teardown: drain the service, flush the store, release
+        any remote mount.  Safe to call repeatedly (and from ``__exit__``
+        after an explicit close)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         self.service.close()
         self.store.flush()
         if self._remote is not None:

@@ -40,10 +40,38 @@ from ..sched.dag import DagWorkflow, kahn_order
 SCHEMA_KIND = "repro.workflow_spec"
 SCHEMA_VERSION = 1
 
+# characters a namespace may use; "/" is reserved as the namespace/dataset
+# separator inside composed dataset ids, ":" only for the "tenant:<name>"
+# convention the gateway uses
+_NAMESPACE_OK = frozenset(
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_.:-"
+)
+
 
 class SpecError(ValueError):
     """The workflow document is structurally invalid (cycle, duplicate node,
     unknown parent/module, empty graph)."""
+
+
+def check_namespace(namespace: str) -> str:
+    """Validate a namespace label (``""`` — the legacy un-namespaced world —
+    is allowed and returned as-is)."""
+    if namespace and not set(namespace) <= _NAMESPACE_OK:
+        raise SpecError(
+            f"invalid namespace {namespace!r}: allowed characters are "
+            "letters, digits, '_', '.', ':', '-'"
+        )
+    return namespace
+
+
+def namespaced_dataset(namespace: str, dataset_id: str) -> str:
+    """The dataset identity every ``PrefixKey`` of a namespaced workflow is
+    derived from: ``<namespace>/<dataset_id>`` (or plain ``dataset_id`` when
+    un-namespaced).  Two tenants submitting the same document into the same
+    namespace therefore share store keys — and into different namespaces,
+    never do."""
+    check_namespace(namespace)
+    return f"{namespace}/{dataset_id}" if namespace else dataset_id
 
 
 @dataclass(frozen=True)
@@ -100,14 +128,30 @@ class WorkflowSpec:
         dataset_id: str,
         workflow_id: str = "",
         nodes: Sequence[NodeSpec] = (),
+        namespace: str = "",
     ) -> None:
         if not dataset_id:
             raise SpecError("a workflow spec needs a dataset_id")
         self.dataset_id = dataset_id
         self.workflow_id = workflow_id
+        self.namespace = check_namespace(namespace)
         self._nodes: dict[str, NodeSpec] = {}
         for n in nodes:
             self._add_node(n)
+
+    @property
+    def effective_dataset_id(self) -> str:
+        """Dataset identity after namespace composition — what every engine
+        view (and therefore every ``PrefixKey``) is built from."""
+        return namespaced_dataset(self.namespace, self.dataset_id)
+
+    def with_namespace(self, namespace: str) -> "WorkflowSpec":
+        """A copy of this spec rebound to ``namespace`` (nodes shared — they
+        are immutable).  The gateway uses this to pin every submission to its
+        tenant's private namespace or the opt-in shared one."""
+        return WorkflowSpec(
+            self.dataset_id, self.workflow_id, self.nodes, namespace=namespace
+        )
 
     # -- construction --------------------------------------------------------
     def _add_node(self, node: NodeSpec) -> None:
@@ -251,8 +295,11 @@ class WorkflowSpec:
     def canonical(self) -> dict[str, Any]:
         """Normalized rendering for digesting: nodes sorted by id, parent
         *order* preserved (fan-in order is semantic), presentational fields
-        (``workflow_id``, document key order) excluded."""
-        return {
+        (``workflow_id``, document key order) excluded.  The namespace is
+        part of the identity when set (the same document in two namespaces
+        names two disjoint artifact families); un-namespaced specs keep their
+        pre-namespace digests."""
+        doc: dict[str, Any] = {
             "version": SCHEMA_VERSION,
             "dataset_id": self.dataset_id,
             "nodes": [
@@ -260,6 +307,9 @@ class WorkflowSpec:
                 for n in sorted(self._nodes.values(), key=lambda n: n.node_id)
             ],
         }
+        if self.namespace:
+            doc["namespace"] = self.namespace
+        return doc
 
     @property
     def digest(self) -> str:
@@ -299,7 +349,7 @@ class WorkflowSpec:
             self._resolve_ref(self._nodes[nid], registry)
             for nid in self.topo_order()
         )
-        return Workflow(self.dataset_id, refs, self.workflow_id)
+        return Workflow(self.effective_dataset_id, refs, self.workflow_id)
 
     def to_dag(
         self, registry: ModuleRegistry | None = None, *, strict: bool = True
@@ -307,7 +357,7 @@ class WorkflowSpec:
         """Scheduler view (works for chains and DAGs alike).  ``strict`` as
         in :meth:`to_workflow`."""
         self.validate(registry if strict else None)
-        dag = DagWorkflow(self.dataset_id, self.workflow_id, registry=None)
+        dag = DagWorkflow(self.effective_dataset_id, self.workflow_id, registry=None)
         for nid in self.topo_order():
             node = self._nodes[nid]
             dag.add(
@@ -332,7 +382,7 @@ class WorkflowSpec:
 
     # -- serialization ---------------------------------------------------------
     def to_dict(self) -> dict[str, Any]:
-        return {
+        doc: dict[str, Any] = {
             "kind": SCHEMA_KIND,
             "version": SCHEMA_VERSION,
             "dataset_id": self.dataset_id,
@@ -349,6 +399,9 @@ class WorkflowSpec:
                 for n in self._nodes.values()
             ],
         }
+        if self.namespace:
+            doc["namespace"] = self.namespace
+        return doc
 
     @classmethod
     def from_dict(cls, doc: Mapping[str, Any]) -> "WorkflowSpec":
@@ -363,7 +416,11 @@ class WorkflowSpec:
             )
         if "dataset_id" not in doc:
             raise SpecError("workflow spec document missing 'dataset_id'")
-        spec = cls(doc["dataset_id"], doc.get("workflow_id", ""))
+        spec = cls(
+            doc["dataset_id"],
+            doc.get("workflow_id", ""),
+            namespace=str(doc.get("namespace") or ""),
+        )
         for nd in doc.get("nodes", ()):
             missing = [f for f in ("id", "module") if f not in nd]
             if missing:

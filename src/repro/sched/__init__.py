@@ -21,10 +21,11 @@ from .dag import DagNode, DagWorkflow
 from .dispatch import NodeDispatcher, ProcessPoolDispatcher
 from .scheduler import DagRunResult, DagScheduler, DagWorkflowError, NodeResult
 from .singleflight import SingleFlight
-from .stats import AggregateStats
-from .service import WorkflowService
+from .stats import AggregateStats, TenantCounters, TenantLedger
+from .service import AdmissionRejected, ServiceClosed, WorkflowService
 
 __all__ = [
+    "AdmissionRejected",
     "AggregateStats",
     "DagNode",
     "DagRunResult",
@@ -34,6 +35,9 @@ __all__ = [
     "NodeDispatcher",
     "NodeResult",
     "ProcessPoolDispatcher",
+    "ServiceClosed",
     "SingleFlight",
+    "TenantCounters",
+    "TenantLedger",
     "WorkflowService",
 ]

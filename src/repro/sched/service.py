@@ -19,7 +19,7 @@ import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from concurrent.futures import wait as futures_wait
-from typing import Any, Mapping, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 from ..core.cost import CostModel
 from ..core.provenance import ProvenanceLog
@@ -34,8 +34,34 @@ from .singleflight import SingleFlight
 from .stats import AggregateStats
 
 
+class AdmissionRejected(RuntimeError):
+    """The service's pending-run budget is full: the submission was refused,
+    not queued.  Callers (the gateway maps this to ``429 Retry-After``)
+    should back off and resubmit; nothing was scheduled."""
+
+    def __init__(self, pending: int, max_pending: int) -> None:
+        super().__init__(
+            f"submission rejected: {pending} runs already pending "
+            f"(max_pending={max_pending})"
+        )
+        self.pending = pending
+        self.max_pending = max_pending
+
+
+class ServiceClosed(RuntimeError):
+    """The service is shutting down (or closed): new submissions are
+    refused while in-flight runs drain.  The gateway maps this to 503."""
+
+
 class WorkflowService:
-    """Shared-store, shared-policy execution service for concurrent workflows."""
+    """Shared-store, shared-policy execution service for concurrent workflows.
+
+    ``max_pending`` bounds runs in flight (queued + executing): submissions
+    beyond it raise :class:`AdmissionRejected` instead of piling onto the
+    coordinator pool's unbounded queue — saturation becomes an explicit,
+    retryable signal rather than silent memory growth.  ``None`` preserves
+    the legacy unbounded behavior.
+    """
 
     def __init__(
         self,
@@ -49,7 +75,10 @@ class WorkflowService:
         max_concurrent_runs: int = 32,
         singleflight: "SingleFlight | None" = None,
         dispatcher: "NodeDispatcher | None" = None,
+        max_pending: int | None = None,
     ) -> None:
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None for unbounded)")
         self.scheduler = DagScheduler(
             store=store,
             policy=policy,
@@ -71,6 +100,11 @@ class WorkflowService:
             max_workers=max_concurrent_runs, thread_name_prefix="dag-run"
         )
         self._inflight: list[Future] = []  # coordinator-pool futures
+        self.max_pending = max_pending
+        self._pending = 0  # submitted, not yet finished (under self._lock)
+        self._rejected = 0  # AdmissionRejected count (under self._lock)
+        self._draining = False
+        self._closed = False
 
     # -- delegated surface ---------------------------------------------------
     @property
@@ -95,28 +129,77 @@ class WorkflowService:
         return self.scheduler.dag(dataset_id, workflow_id)
 
     # -- submission ----------------------------------------------------------
-    def submit(self, dag: DagWorkflow | Workflow, data: Any) -> "Future[DagRunResult]":
-        """Non-blocking: schedule one workflow run, return its future."""
+    @property
+    def pending_runs(self) -> int:
+        """Runs submitted but not yet finished (queued + executing)."""
+        with self._lock:
+            return self._pending
+
+    @property
+    def rejected_runs(self) -> int:
+        """Submissions refused by the ``max_pending`` admission bound."""
+        with self._lock:
+            return self._rejected
+
+    def submit(
+        self,
+        dag: DagWorkflow | Workflow,
+        data: Any,
+        on_state: "Callable[[str], None] | None" = None,
+    ) -> "Future[DagRunResult]":
+        """Non-blocking: schedule one workflow run, return its future.
+
+        Raises :class:`AdmissionRejected` when ``max_pending`` runs are
+        already in flight and :class:`ServiceClosed` once shutdown has begun.
+        ``on_state`` fires with ``"started"`` when a coordinator picks the
+        run up, then ``"finished"`` or ``"failed"`` (before the future
+        resolves); exceptions it raises are swallowed — observability must
+        not kill the run.
+        """
         fut: Future[DagRunResult] = Future()
         with self._lock:
+            if self._draining or self._closed:
+                raise ServiceClosed("service is shutting down; not accepting runs")
+            if self.max_pending is not None and self._pending >= self.max_pending:
+                self._rejected += 1
+                raise AdmissionRejected(self._pending, self.max_pending)
+            self._pending += 1
             if self._t_first is None:
                 self._t_first = time.perf_counter()
 
+        def _notify(state: str) -> None:
+            if on_state is None:
+                return
+            try:
+                on_state(state)
+            except Exception:  # noqa: BLE001 - observer errors never kill runs
+                pass
+
         def _coordinate() -> None:
+            _notify("started")
             try:
                 result = self.scheduler.run(dag, data)
             except BaseException as e:  # noqa: BLE001 - delivered via future
                 with self._lock:
                     self._agg.failures += 1
                     self._t_last = time.perf_counter()
+                    self._pending -= 1
+                _notify("failed")
                 fut.set_exception(e)
             else:
                 with self._lock:
                     self._agg.add_run(result)
                     self._t_last = time.perf_counter()
+                    self._pending -= 1
+                _notify("finished")
                 fut.set_result(result)
 
-        coord = self._coord_pool.submit(_coordinate)
+        try:
+            coord = self._coord_pool.submit(_coordinate)
+        except RuntimeError:  # pool already shut down: racing close()
+            with self._lock:
+                self._pending -= 1
+            raise ServiceClosed("service is shutting down; not accepting runs")
         with self._lock:
             self._inflight = [f for f in self._inflight if not f.done()]
             self._inflight.append(coord)
@@ -156,7 +239,21 @@ class WorkflowService:
             pending = list(self._inflight)
         futures_wait(pending, timeout=timeout)
 
+    def begin_shutdown(self) -> None:
+        """Stop accepting submissions (``submit`` raises
+        :class:`ServiceClosed`) while in-flight runs keep executing — the
+        first half of a graceful SIGTERM: reject new, drain old."""
+        with self._lock:
+            self._draining = True
+
     def close(self) -> None:
+        """Graceful, idempotent shutdown: reject new submissions, drain
+        in-flight runs, release the pools."""
+        self.begin_shutdown()
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         self.drain()
         self._coord_pool.shutdown(wait=True)
         self.scheduler.close()
