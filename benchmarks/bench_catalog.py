@@ -1,0 +1,150 @@
+"""Provenance catalog: indexed find-by-statepoint vs linear scan + cluster round.
+
+Two rounds, matching ISSUE 8's acceptance criteria:
+
+**Query latency** — one ``CatalogIndex`` holding N records (100k full mode,
+20k smoke) vs the naive baseline a catalog-less system would run: a linear
+``matches()`` scan over every record.  The indexed path intersects posting
+lists (terminal module, ``(module, param, value)``, dataset, namespace) and
+only runs the exact predicate on the survivors, so it must be **>=10x**
+faster at 100k records (the smoke round asserts a softer 5x at 20k — posting
+lists win more the larger the haystack).
+
+**Cluster fan-out** — 3 in-process shard servers, ``replication=2``, a
+``Client`` in cluster mode: run real workflows until the catalog holds their
+artifacts, kill one shard, then ``Client.find``.  The answer must come from
+the surviving replicas with **zero phantom records** — every returned
+artifact presence-verified in one batched probe.
+
+``--smoke`` (CI): both rounds, smaller N, the same assertions (5x floor).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.catalog import CatalogIndex, CatalogQuery, CatalogRecord, rank_key
+from repro.core.workflow import encode_param
+
+
+# -- round 1: indexed vs linear ------------------------------------------------
+def _synthetic_records(n: int) -> list[CatalogRecord]:
+    # pre-encode the small value universes once: building 100k records must
+    # not dominate the benchmark's wall clock
+    enc_shard = [encode_param(i) for i in range(100)]
+    enc_k = [encode_param(i) for i in range(97)]
+    out = []
+    for i in range(n):
+        term = f"m{i % 20}"
+        out.append(
+            CatalogRecord(
+                key=f"ds{i % 50}::load@{i:08x}>{term}@{i:08x}",
+                namespace="bench" if i % 3 else "shared",
+                dataset=f"ds{i % 50}",
+                modules=("load", term),
+                states=({"shard": enc_shard[i % 100]}, {"k": enc_k[i % 97]}),
+                nbytes=1024,
+                created_at=1.0 + i * 1e-6,
+                last_used_at=1.0 + i * 1e-6,
+                n_loads=i % 7,
+            )
+        )
+    return out
+
+
+def _query_round(smoke: bool) -> list[str]:
+    n = 20_000 if smoke else 100_000
+    floor = 5.0 if smoke else 10.0
+    records = _synthetic_records(n)
+    idx = CatalogIndex()
+    t0 = time.perf_counter()
+    for rec in records:
+        idx.upsert(rec)
+    build_s = time.perf_counter() - t0
+
+    q = CatalogQuery.build(module="m7", params={"k": 31}, limit=20)
+    expect = sorted((r for r in records if q.matches(r)), key=rank_key)[: q.limit]
+    assert expect, "benchmark query must have hits"
+    got = idx.query(q)
+    assert got == expect, "indexed answer must equal the linear scan's"
+
+    reps_idx = 50 if smoke else 200
+    t0 = time.perf_counter()
+    for _ in range(reps_idx):
+        idx.query(q)
+    indexed_s = (time.perf_counter() - t0) / reps_idx
+
+    reps_lin = 3 if smoke else 5
+    t0 = time.perf_counter()
+    for _ in range(reps_lin):
+        sorted((r for r in records if q.matches(r)), key=rank_key)[: q.limit]
+    linear_s = (time.perf_counter() - t0) / reps_lin
+
+    speedup = linear_s / indexed_s if indexed_s > 0 else float("inf")
+    assert speedup >= floor, (
+        f"indexed query only {speedup:.1f}x faster than the linear scan at "
+        f"n={n} (floor {floor:.0f}x)"
+    )
+    return [
+        f"catalog_build_{n},{build_s / n * 1e6:.3f},per-record upsert",
+        f"catalog_query_indexed_{n},{indexed_s * 1e6:.1f},hits={len(expect)}",
+        f"catalog_query_linear_{n},{linear_s * 1e6:.1f},"
+        f"speedup={speedup:.0f}x (floor {floor:.0f}x)",
+    ]
+
+
+# -- round 2: cluster fan-out + kill-one-shard zero-phantom --------------------
+def _cluster_round(smoke: bool) -> list[str]:
+    from repro.api import Client
+    from repro.core import MemoryBackend
+    from repro.net import StoreServer
+
+    n_chains = 4 if smoke else 12
+    servers = [StoreServer(MemoryBackend()).start() for _ in range(3)]
+    urls = ",".join(f"127.0.0.1:{s.port}" for s in servers)
+
+    def mk(cid: str) -> Client:
+        c = Client(store_url=urls, replication=2, policy="TSAR", client_id=cid)
+        c.register_fn("load", lambda d, scale=1: [x * scale for x in d], scale=1)
+        c.register_fn("agg", lambda d, mode="sum": sum(d), mode="sum")
+        return c
+
+    lines = []
+    writer = mk("bench-w")
+    try:
+        for i in range(n_chains):
+            spec = writer.spec("ds")
+            spec.chain([("load", {"scale": i}), ("agg", {"mode": "sum"})])
+            writer.run(spec, [1.0, 2.0, 3.0])
+        before = {r.key for r in writer.find(module="agg")}
+        assert len(before) == n_chains, (len(before), n_chains)
+
+        servers[0].stop()  # kill one shard; replicas must cover everything
+        reader = mk("bench-r")  # fresh mount: no local index to lean on
+        try:
+            t0 = time.perf_counter()
+            hits = reader.find(module="agg")
+            fanout_s = time.perf_counter() - t0
+            assert {r.key for r in hits} == before, "replicas must cover the kill"
+            presence = reader.store.has_state_many([r.key for r in hits])
+            phantoms = [k for k, v in presence.items() if v != "present"]
+            assert not phantoms, f"phantom catalog records: {phantoms}"
+            lines.append(
+                f"catalog_cluster_fanout,{fanout_s * 1e6:.0f},"
+                f"records={len(hits)} phantoms=0 after shard kill"
+            )
+        finally:
+            reader.close()
+    finally:
+        writer.close()
+        for s in servers[1:]:
+            s.stop()
+    return lines
+
+
+def run(smoke: bool = False) -> list[str]:
+    return _query_round(smoke) + _cluster_round(smoke)
+
+
+if __name__ == "__main__":
+    print("\n".join(run(smoke="--smoke" in sys.argv)))

@@ -9,6 +9,7 @@ import traceback
 def main() -> None:
     from . import (
         bench_adaptive_risp,
+        bench_catalog,
         bench_dag_scheduler,
         bench_eviction,
         bench_gateway,
@@ -36,6 +37,7 @@ def main() -> None:
         ("sharded_store (repro.net cluster: shards + replication)", bench_sharded_store.run),
         ("streaming (wire v2: chunked transfer + batched probes)", bench_streaming.run),
         ("gateway (HTTP front door: tenants, reuse, backpressure)", bench_gateway.run),
+        ("catalog (ISSUE 8: find-by-statepoint vs linear scan, cluster fan-out)", bench_catalog.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -33,6 +33,7 @@ from ..core.workflow import ModuleRef, ModuleSpec, Workflow
 from ..sched.dag import DagWorkflow
 from ..sched.dispatch import NodeDispatcher
 from ..sched.scheduler import DagRunResult
+from ..catalog import Catalog, CatalogRecord, rank_key
 from ..sched.service import WorkflowService
 from ..sched.singleflight import SingleFlight
 from ..sched.stats import AggregateStats
@@ -187,6 +188,13 @@ class Client:
             else ModuleRegistry(registry)
         )
         cost_model = CostModel(store=store)
+        # provenance catalog: local query index mirrored to the remote pool
+        # (server- or cluster-side) when one is mounted, so the index
+        # survives client churn.  Mirrors through the RAW remote backend, not
+        # the read-through cache wrapper — catalog ops are not blob ops.
+        self.catalog = Catalog(
+            self._remote if self._remote is not None else store.backend
+        )
         self.executor = WorkflowExecutor(
             store=store,
             policy=policy,
@@ -194,6 +202,7 @@ class Client:
             admission=admission,
             provenance=provenance,
             cost_model=cost_model,
+            catalog=self.catalog,
         )
         self.service = WorkflowService(
             store=store,
@@ -207,8 +216,9 @@ class Client:
             singleflight=singleflight,
             dispatcher=dispatcher,
             max_pending=max_pending,
+            catalog=self.catalog,
         )
-        self.recommender = Recommender(policy, store)
+        self.recommender = Recommender(policy, store, catalog=self.catalog)
         # client-level aggregate stats spanning BOTH engines (the service's
         # own tally covers only submit()-path runs)
         self._lock = threading.Lock()
@@ -398,6 +408,78 @@ class Client:
                 chain = partial.to_workflow(self.registry, strict=False).modules
         return self.recommender.recommend(dataset_id, chain, top_k=top_k)
 
+    def find(
+        self,
+        module: str | None = None,
+        params: Mapping[str, Any] | None = None,
+        dataset: str | None = None,
+        namespace: str | None = None,
+        *,
+        any_position: bool = False,
+        limit: int = 20,
+        verify: bool = True,
+    ) -> list[CatalogRecord]:
+        """Query the provenance catalog: which stored artifacts were produced
+        by ``module`` with these (decoded) ``params``, for this ``dataset``,
+        in this ``namespace``?
+
+        Matching is against the *terminal* module of each artifact's chain
+        unless ``any_position=True``.  ``namespace=None`` scopes to this
+        client's bound namespace (or any, when the client is un-namespaced);
+        pass ``"*"`` to search across namespaces explicitly, or ``""`` for
+        the un-namespaced pool only.  Results merge the local index with the
+        remote pool's (server/cluster) index when one is mounted, ranked by
+        reuse count, then chain depth, then recency.
+
+        With ``verify=True`` (default) every candidate is checked against
+        the store in one batched presence probe; only artifacts readable
+        *right now* survive — the zero-phantom guarantee: ``find`` never
+        reports an evicted artifact.  Authoritative absences additionally
+        prune the catalog; candidates whose every replica is unreachable are
+        dropped from the answer but kept indexed (the artifact may well
+        exist; only its shards are down).
+        """
+        if namespace is None:
+            ns = self.namespace if self.namespace else "*"
+        else:
+            ns = namespace
+        hits = self.catalog.find(
+            module=module,
+            params=dict(params) if params else None,
+            dataset=dataset,
+            namespace=None if ns == "*" else ns,
+            any_position=any_position,
+            limit=limit,
+        )
+        if not verify or not hits:
+            return hits
+        presence = self.store.has_state_many([r.key for r in hits])
+        kept = self.catalog.verify_present(hits, presence)
+        # fold in the local store's live stats (loads observed by THIS
+        # process since the record was published) so ranking reflects the
+        # freshest counters we can see
+        merged: list[CatalogRecord] = []
+        for rec in kept:
+            art = self.store.records.get(rec.key)
+            if art is not None and (
+                art.n_loads > rec.n_loads or art.last_used_at > rec.last_used_at
+            ):
+                rec = CatalogRecord(
+                    key=rec.key,
+                    namespace=rec.namespace,
+                    dataset=rec.dataset,
+                    modules=rec.modules,
+                    states=rec.states,
+                    nbytes=rec.nbytes,
+                    compute_s=rec.compute_s,
+                    created_at=rec.created_at,
+                    last_used_at=max(rec.last_used_at, art.last_used_at),
+                    n_loads=max(rec.n_loads, art.n_loads),
+                )
+            merged.append(rec)
+        merged.sort(key=rank_key)
+        return merged
+
     # -- reporting / lifecycle -----------------------------------------------------
     def stats(self) -> AggregateStats:
         """Aggregate throughput/reuse across BOTH engines (sequential runs +
@@ -425,6 +507,7 @@ class Client:
             self._closed = True
         self.service.close()
         self.store.flush()
+        self.catalog.close()
         if self._remote is not None:
             self._remote.close()
 

@@ -21,12 +21,15 @@ same :class:`~repro.core.rules.RuleMiner` state the storage policies maintain
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Sequence
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Sequence
 
 from ..core.risp import StoragePolicy
 from ..core.store import IntermediateStore
-from ..core.workflow import ModuleRef, PrefixKey
+from ..core.workflow import ModuleRef, PrefixKey, decode_param
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..catalog import Catalog
 
 
 @dataclass(frozen=True)
@@ -34,9 +37,11 @@ class Suggestion:
     """One ranked recommendation.
 
     ``kind`` is ``"reusable_prefix"`` (start from this stored state; its
-    depth tells how many modules the user skips) or ``"next_module"``
+    depth tells how many modules the user skips), ``"next_module"``
     (``module_id`` extends the partial chain; ``prefix`` is the extended
-    chain the rule describes).
+    chain the rule describes), or ``"near_miss"`` (a *stored* artifact with
+    the same module-id chain but exactly one differing parameter — served
+    from the catalog; ``note`` names the difference).
     """
 
     kind: str
@@ -45,6 +50,7 @@ class Suggestion:
     dataset_support: int
     stored: bool
     module_id: str | None = None
+    note: str = ""
 
     @property
     def confidence(self) -> float:
@@ -61,6 +67,8 @@ class Suggestion:
                 f"next: {self.module_id} (confidence {self.confidence:.2f}, "
                 f"support {self.support}) -> {mods}"
             )
+        if self.kind == "near_miss":
+            return f"near miss [{self.note}]: {mods} (loads {self.support})"
         live = "stored" if self.stored else "recommended"
         return (
             f"reuse depth {self.depth} [{live}]: {mods} "
@@ -70,12 +78,13 @@ class Suggestion:
 
 @dataclass
 class RecommendReport:
-    """Both suggestion lists for one partial workflow."""
+    """Suggestion lists for one partial workflow."""
 
     dataset_id: str
     depth: int  # partial-chain length the suggestions are relative to
     reusable_prefixes: list[Suggestion]
     next_modules: list[Suggestion]
+    near_misses: list[Suggestion] = field(default_factory=list)
 
     @property
     def best_reuse(self) -> Suggestion | None:
@@ -84,6 +93,10 @@ class RecommendReport:
     @property
     def best_next(self) -> Suggestion | None:
         return self.next_modules[0] if self.next_modules else None
+
+    @property
+    def best_near_miss(self) -> Suggestion | None:
+        return self.near_misses[0] if self.near_misses else None
 
 
 class Recommender:
@@ -100,9 +113,11 @@ class Recommender:
         self,
         policy: StoragePolicy,
         store: IntermediateStore | None = None,
+        catalog: "Catalog | None" = None,
     ) -> None:
         self.policy = policy
         self.store = store
+        self.catalog = catalog
         self._index: dict[tuple[str, int], list[PrefixKey]] = {}
         self._indexed_at = -1
 
@@ -200,4 +215,87 @@ class Recommender:
             depth=len(modules),
             reusable_prefixes=reusable,
             next_modules=deduped[:top_k],
+            near_misses=self.near_misses(dataset_id, modules, top_k=top_k),
         )
+
+    def near_misses(
+        self,
+        dataset_id: str,
+        modules: Sequence[ModuleRef] = (),
+        top_k: int = 5,
+    ) -> list[Suggestion]:
+        """Stored artifacts one parameter away from the partial chain.
+
+        A *near miss* has the exact module-id chain of ``dataset_id =>
+        modules`` but exactly one differing (or extra/missing) parameter
+        somewhere along it — the catalog's answer to "someone already ran
+        almost this; is their setting the one you meant?".  Served entirely
+        from the :class:`~repro.catalog.Catalog` (empty without one), ranked
+        by reuse count then recency.  ``dataset_id`` may be namespaced
+        (``ns/dataset``); matching is namespace-exact.
+        """
+        if self.catalog is None or not modules:
+            return []
+        from ..catalog.records import split_namespaced_dataset
+
+        modules = tuple(modules)
+        chain = tuple(m.module_id for m in modules)
+        ns, ds = split_namespaced_dataset(dataset_id)
+        try:
+            records = self.catalog.find(
+                module=chain[-1],
+                dataset=ds,
+                namespace=ns or "",
+                limit=max(64, top_k * 8),
+            )
+        except Exception:  # noqa: BLE001 - advisory surface: degrade to none
+            return []
+
+        own_params = [dict(m.state.params) for m in modules]
+        hits: list[tuple[tuple, Suggestion]] = []
+        for rec in records:
+            if rec.modules != chain or rec.depth != len(chain):
+                continue
+            note = self._one_param_diff(own_params, rec.states, chain)
+            if note is None:
+                continue
+            hits.append(
+                (
+                    (-rec.n_loads, -rec.last_used_at, rec.key),
+                    Suggestion(
+                        kind="near_miss",
+                        prefix=rec.prefix_key(),
+                        support=rec.n_loads,
+                        dataset_support=rec.n_loads,
+                        stored=True,
+                        module_id=chain[-1],
+                        note=note,
+                    ),
+                )
+            )
+        hits.sort(key=lambda it: it[0])
+        return [s for _, s in hits[:top_k]]
+
+    @staticmethod
+    def _one_param_diff(
+        own: "list[dict[str, str]]",
+        theirs: "Sequence[dict[str, str] | Mapping[str, str]]",
+        chain: "tuple[str, ...]",
+    ) -> str | None:
+        """Describe the single differing encoded param, or None if the
+        chains differ by zero params (identical — a reuse hit, not a near
+        miss) or by more than one."""
+        diffs: list[str] = []
+        for pos, module_id in enumerate(chain):
+            mine = own[pos]
+            other = dict(theirs[pos]) if pos < len(theirs) else {}
+            for name in sorted(set(mine) | set(other)):
+                a, b = mine.get(name), other.get(name)
+                if a == b:
+                    continue
+                if len(diffs) >= 2:
+                    return None
+                mine_s = repr(decode_param(a)) if a is not None else "unset"
+                their_s = repr(decode_param(b)) if b is not None else "unset"
+                diffs.append(f"{module_id}.{name}={their_s} (yours {mine_s})")
+        return diffs[0] if len(diffs) == 1 else None

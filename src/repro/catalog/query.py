@@ -1,0 +1,128 @@
+"""``python -m repro.catalog.query`` — find-by-statepoint from the shell.
+
+Works against every deployment:
+
+* ``--root DIR`` — a local store directory: loads ``catalog.json`` through
+  a :class:`~repro.core.backends.LocalFSBackend`.
+* ``--store-url tcp://h:p[,h:p...]`` — a store server or cluster: runs the
+  query server-side (``catalog_query``), fanning out and merging when the
+  url names more than one shard.
+
+Examples::
+
+    python -m repro.catalog.query --root /tmp/store --module align --param k=31
+    python -m repro.catalog.query --store-url tcp://localhost:7077 \
+        --module train --param lr=0.1 --dataset d1 --json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Sequence
+
+from .catalog import Catalog
+from .records import CatalogQuery, CatalogRecord
+
+
+def _parse_param(spec: str) -> tuple[str, Any]:
+    """``name=value`` with the value parsed as JSON first (so ``k=31``
+    matches the *int* 31), falling back to the raw string."""
+    if "=" not in spec:
+        raise argparse.ArgumentTypeError(
+            f"--param needs name=value, got {spec!r}"
+        )
+    name, raw = spec.split("=", 1)
+    try:
+        return name, json.loads(raw)
+    except json.JSONDecodeError:
+        return name, raw
+
+
+def _open_catalog(args: argparse.Namespace) -> Catalog:
+    if args.store_url:
+        from ..net.client import RemoteBackend
+        from ..net.sharded import ShardedBackend
+
+        url = args.store_url
+        if "," in url:
+            backend = ShardedBackend(url, replication=args.replication)
+        else:
+            backend = RemoteBackend(url)
+        return Catalog(backend, persist=False)
+    from ..core.backends import LocalFSBackend
+
+    return Catalog(LocalFSBackend(args.root), persist=True)
+
+
+def _fmt_row(rec: CatalogRecord) -> str:
+    params = ", ".join(f"{k}={v!r}" for k, v in sorted(rec.params().items()))
+    ns = rec.namespace or "-"
+    return (
+        f"{ns:12s} {rec.dataset:16s} {'>'.join(rec.modules):40s} "
+        f"[{params}] loads={rec.n_loads} bytes={rec.nbytes}"
+    )
+
+
+def main(argv: "Sequence[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.catalog.query",
+        description="Query the artifact catalog (find-by-statepoint).",
+    )
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--root", help="local store directory (reads catalog.json)")
+    src.add_argument(
+        "--store-url",
+        help="store server url; comma-separated list queries a cluster",
+    )
+    ap.add_argument("--module", help="terminal module id to match")
+    ap.add_argument(
+        "--param",
+        action="append",
+        default=[],
+        type=_parse_param,
+        metavar="NAME=VALUE",
+        help="parameter filter (repeatable); VALUE parsed as JSON, then raw",
+    )
+    ap.add_argument("--dataset", help="bare dataset id to match")
+    ap.add_argument("--namespace", help="namespace to match (e.g. shared)")
+    ap.add_argument(
+        "--any-position",
+        action="store_true",
+        help="match artifacts whose chain *contains* the module anywhere",
+    )
+    ap.add_argument("--limit", type=int, default=20)
+    ap.add_argument(
+        "--replication", type=int, default=2, help="cluster replica-set size"
+    )
+    ap.add_argument("--json", action="store_true", help="emit records as JSON")
+    args = ap.parse_args(argv)
+    if args.param and not args.module:
+        ap.error("--param needs --module to anchor it")
+
+    catalog = _open_catalog(args)
+    try:
+        q = CatalogQuery.build(
+            module=args.module,
+            params=dict(args.param),
+            dataset=args.dataset,
+            namespace=args.namespace,
+            any_position=args.any_position,
+            limit=args.limit,
+        )
+        hits = catalog.query(q)
+    finally:
+        close = getattr(catalog.backend, "close", None)
+        if callable(close):
+            close()
+    if args.json:
+        print(json.dumps([r.to_doc() for r in hits], indent=2))
+    else:
+        for rec in hits:
+            print(_fmt_row(rec))
+        print(f"{len(hits)} artifact(s)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

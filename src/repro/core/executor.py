@@ -119,12 +119,19 @@ def admit_and_store(
     prefix: PrefixKey,
     value: Any,
     measured_exec_s: float | None,
+    catalog: Any = None,
 ) -> tuple[str | None, float]:
     """Run one policy-recommended store through cost gating + budget admission.
 
     Returns ``(key, seconds)`` with ``key=None`` when the Eq. 4.9 gate or the
     store budget rejected the artifact (policy bookkeeping is cleaned up so it
     is never recommended for reuse).
+
+    ``catalog`` (a :class:`repro.catalog.Catalog`, duck-typed to keep the
+    core layer free of upward imports) is the provenance index's admission
+    hook: this is the only seam that still holds the structured ``prefix``
+    the flat store key was rendered from, so the publish happens here —
+    after ``put`` returns, never under the store lock.
     """
     key = prefix.key(policy.with_state)
     if admission == "t1_gt_t2" and not cost_model.should_store(prefix, measured_exec_s):
@@ -138,6 +145,8 @@ def admit_and_store(
     if not res.admitted:  # artifact exceeds the whole store budget: never stored
         policy.stored.pop(key, None)
         return None, res.seconds
+    if catalog is not None:
+        catalog.publish(prefix, key, store.records.get(key))
     return key, res.seconds
 
 
@@ -155,6 +164,7 @@ class WorkflowExecutor:
     admission: str = "always"  # "always" | "t1_gt_t2"
     provenance: ProvenanceLog | None = None
     cost_model: CostModel | None = None
+    catalog: Any = None  # optional repro.catalog.Catalog (duck-typed)
 
     def __post_init__(self) -> None:
         if not isinstance(self.registry, ModuleRegistry):
@@ -169,6 +179,9 @@ class WorkflowExecutor:
 
     def _on_store_evict(self, key: str) -> None:
         self.policy.stored.pop(key, None)
+        # runs under the store lock: Catalog.discard is in-memory only
+        if self.catalog is not None:
+            self.catalog.discard(key)
 
     # -- registration (delegates to the shared registry) ----------------------
     def register(self, spec: ModuleSpec) -> None:
@@ -229,10 +242,12 @@ class WorkflowExecutor:
         if reused is not None:
             # adopt the fact into local bookkeeping so later planning
             # (and eviction listeners) see what we just relied on
+            reused_key = reused.key(self.policy.with_state)
             self.policy.stored.setdefault(
-                reused.key(self.policy.with_state),
-                StoredRecord(reused, self.policy.n_pipelines),
+                reused_key, StoredRecord(reused, self.policy.n_pipelines)
             )
+            if self.catalog is not None:  # refresh reuse counters for ranking
+                self.catalog.touch(reused_key, self.store.records.get(reused_key))
         start_idx = reused.depth if reused is not None else 0
         value = loaded if reused is not None else data
 
@@ -284,6 +299,7 @@ class WorkflowExecutor:
                 prefix,
                 stage_values[depth],
                 sum(module_seconds[:depth]) or None,
+                catalog=self.catalog,
             )
             store_s += dt
             if key is not None:
@@ -342,6 +358,8 @@ class WorkflowExecutor:
                 return
             if state == "absent":
                 self.store.put(key, stage_values[depth])
+                if self.catalog is not None:
+                    self.catalog.publish(prefix, key, self.store.records.get(key))
             self.policy.stored.setdefault(
                 key, StoredRecord(prefix, self.policy.n_pipelines)
             )

@@ -117,7 +117,7 @@ class IntermediateStore:
         self._dirty = False
         self._mutations_since_flush = 0
         self._last_flush = time.monotonic()
-        self._shared_index_cache: tuple[float, dict[str, Any]] | None = None
+        self._shared_index_cache: tuple[float, bytes | str | None, dict[str, Any]] | None = None
         # one reentrant lock serializes index/manifest mutation so concurrent
         # scheduler workers can't corrupt ``records`` or interleave partial
         # writes of ``index.json`` (evict listeners run while it is held —
@@ -251,22 +251,27 @@ class IntermediateStore:
     def _shared_index(self) -> dict[str, Any]:
         """The pool's ``index.json``, parsed, cached for one flush interval —
         adopting k sibling artifacts must not cost k full-index transfers.
-        Callers hold ``_lock``."""
+        When the TTL lapses but the raw bytes come back unchanged, the cached
+        parse is reused: deep-chain probes against a quiet pool pay a transfer
+        but never an O(artifacts) JSON decode.  Callers hold ``_lock``."""
         now = time.monotonic()
         cached = self._shared_index_cache
         if cached is not None and now - cached[0] < max(self.index_flush_interval_s, 1.0):
-            return cached[1]
-        parsed: dict[str, Any] = {}
+            return cached[2]
         try:
             raw = self.backend.read_meta("index.json")
         except BackendUnavailable:
             raw = None  # stats cache unreachable: synthesize records instead
+        if cached is not None and raw == cached[1]:
+            self._shared_index_cache = (now, cached[1], cached[2])
+            return cached[2]
+        parsed: dict[str, Any] = {}
         if raw:
             try:
                 parsed = json.loads(raw)
             except json.JSONDecodeError:
                 parsed = {}
-        self._shared_index_cache = (now, parsed)
+        self._shared_index_cache = (now, raw, parsed)
         return parsed
 
     def _adopt_record(self, key: str) -> None:

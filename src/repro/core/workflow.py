@@ -220,8 +220,23 @@ class ToolState:
         return cls(items)
 
     def to_config(self) -> dict[str, Any]:
-        """Recover the parameter mapping (inverse of :meth:`from_config`)."""
-        return {k: decode_param(v) for k, v in self.params}
+        """Recover the parameter mapping (inverse of :meth:`from_config`).
+
+        The decoded mapping is computed once and cached on the instance
+        (immutable after construction, so the decode can never go stale):
+        the registry resolves params on every node execution and both the
+        recommender index and the catalog decode whole chains — without the
+        cache each pays a full ``decode_param`` pass per visit.  Callers get
+        a fresh shallow copy so mutating the returned dict cannot corrupt
+        the cache.
+        """
+        cached = getattr(self, "_decoded", None)
+        if cached is None:
+            cached = {k: decode_param(v) for k, v in self.params}
+            # frozen dataclass: bypass the immutability guard for the memo.
+            # eq/hash are unaffected (they only consider declared fields).
+            object.__setattr__(self, "_decoded", cached)
+        return dict(cached)
 
     @property
     def digest(self) -> str:

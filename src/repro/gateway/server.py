@@ -12,6 +12,9 @@ same no-framework discipline as ``repro.net``) that turns the in-process
     (accepted → started → finished/failed).
   * ``GET  /v1/recommend``        — the Ch. 4 recommendation surface over
     the caller's visible namespaces.
+  * ``GET  /v1/artifacts``        — provenance-catalog browse
+    (``?module=&param.k=&dataset=&namespace=``), scoped to one visible
+    namespace per query (private by default, ``shared`` on request).
   * ``GET  /v1/stats``            — fabric aggregate + the caller's ledger.
   * ``GET  /healthz``             — unauthenticated liveness/drain probe.
 
@@ -141,7 +144,7 @@ def _summarize(result: DagRunResult) -> dict[str, Any]:
 
 def _report_doc(report: RecommendReport) -> dict[str, Any]:
     def sug(s: Any) -> dict[str, Any]:
-        return {
+        doc = {
             "kind": s.kind,
             "modules": [m.module_id for m in s.prefix.modules],
             "depth": s.depth,
@@ -150,12 +153,33 @@ def _report_doc(report: RecommendReport) -> dict[str, Any]:
             "stored": s.stored,
             "module_id": s.module_id,
         }
+        if s.note:
+            doc["note"] = s.note
+        return doc
 
     return {
         "dataset_id": report.dataset_id,
         "depth": report.depth,
         "reusable_prefixes": [sug(s) for s in report.reusable_prefixes],
         "next_modules": [sug(s) for s in report.next_modules],
+        "near_misses": [sug(s) for s in report.near_misses],
+    }
+
+
+def _artifact_doc(rec: Any) -> dict[str, Any]:
+    """One catalog record as the wire shape of ``GET /v1/artifacts``."""
+    return {
+        "key": rec.key,
+        "namespace": rec.namespace,
+        "dataset": rec.dataset,
+        "modules": list(rec.modules),
+        "params": [rec.params(i) for i in range(rec.depth)],
+        "depth": rec.depth,
+        "nbytes": rec.nbytes,
+        "compute_s": rec.compute_s,
+        "created_at": rec.created_at,
+        "last_used_at": rec.last_used_at,
+        "n_loads": rec.n_loads,
     }
 
 
@@ -415,6 +439,42 @@ class GatewayServer:
         report = self.client.recommend(partial, top_k=top_k)
         return _report_doc(report)
 
+    def artifacts_doc(
+        self,
+        tenant: str,
+        module: str | None,
+        params: dict[str, Any],
+        dataset: str | None,
+        requested_namespace: str | None,
+        any_position: bool,
+        limit: int,
+    ) -> dict[str, Any]:
+        """Tenant-scoped catalog browse: every query resolves to exactly ONE
+        visible namespace through the same :class:`TenancyPolicy` gate as
+        submissions — the private namespace by default, ``shared`` on
+        request, a foreign tenant's namespace never (403)."""
+        try:
+            namespace = self.tenancy.resolve(tenant, requested_namespace)
+        except NamespaceDenied as e:
+            self._count("denied_namespace")
+            raise _ApiError(403, "namespace_denied", str(e)) from None
+        try:
+            hits = self.client.find(
+                module=module,
+                params=params or None,
+                dataset=dataset,
+                namespace=namespace,
+                any_position=any_position,
+                limit=max(1, min(limit, 500)),
+            )
+        except ValueError as e:  # e.g. param filters without ?module=
+            raise _ApiError(400, "bad_request", str(e)) from None
+        return {
+            "namespace": namespace,
+            "count": len(hits),
+            "artifacts": [_artifact_doc(r) for r in hits],
+        }
+
     def stats_doc(self, tenant: str) -> dict[str, Any]:
         agg = self.client.stats()
         service = self.client.service
@@ -536,6 +596,35 @@ class _GatewayHandler(BaseHTTPRequestHandler):
                     raise _ApiError(400, "bad_request", "top_k must be an int")
                 doc = self.gateway.recommend_doc(
                     tenant, dataset, modules, namespace, top_k
+                )
+                self._send_json(200, doc)
+            elif parts == ["v1", "artifacts"]:
+                q = parse_qs(url.query)
+                module = (q.get("module") or [None])[0]
+                dataset = (q.get("dataset") or [None])[0]
+                namespace = (q.get("namespace") or [None])[0]
+                any_position = (q.get("any") or ["0"])[0] in ("1", "true", "yes")
+                try:
+                    limit = int((q.get("limit") or ["20"])[0])
+                except ValueError:
+                    raise _ApiError(400, "bad_request", "limit must be an int")
+                # ?param.k=v filters on decoded tool-state params; values are
+                # parsed as JSON when they look like it ("3", "true",
+                # '"text"'), else taken as plain strings
+                params: dict[str, Any] = {}
+                for raw_key, values in q.items():
+                    if not raw_key.startswith("param.") or not values:
+                        continue
+                    name = raw_key[len("param."):]
+                    if not name:
+                        raise _ApiError(400, "bad_request", "empty param name")
+                    try:
+                        params[name] = json.loads(values[0])
+                    except ValueError:
+                        params[name] = values[0]
+                doc = self.gateway.artifacts_doc(
+                    tenant, module, params, dataset, namespace,
+                    any_position, limit,
                 )
                 self._send_json(200, doc)
             elif parts == ["v1", "stats"]:

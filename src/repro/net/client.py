@@ -91,6 +91,7 @@ class RemoteBackend(StorageBackend):
         self.stream_threshold = stream_threshold
         self.chunk_bytes = chunk_bytes
         self._server_proto: int | None = None  # None = not yet probed
+        self._server_catalog: bool | None = None  # None = not yet probed
         self._pool: list[socket.socket] = []
         self._pool_lock = threading.Lock()
         self._lease_lock = threading.Lock()
@@ -465,6 +466,62 @@ class RemoteBackend(StorageBackend):
             for k, r in zip(group, results):
                 out[k] = bool(r.get("exists")) if r.get("ok") else None
         return out
+
+    # -- catalog ops -------------------------------------------------------------
+    # Transport failures and pre-catalog servers degrade, never raise: the
+    # catalog is a discovery surface riding on operations (admission, delete)
+    # that already succeeded — mirroring it must not fail them.  A server
+    # answering ``bad_op`` is remembered so later ops skip the round trip.
+    def catalog_put(self, doc: dict[str, Any]) -> bool:
+        """Upsert one record into the server-side catalog.  False when the
+        server predates the op family or is unreachable."""
+        if self._server_catalog is False:
+            return False
+        try:
+            self._request({"op": "catalog_put", "doc": doc})
+        except StoreUnreachable:
+            return False
+        except RemoteStoreError as e:
+            if getattr(e, "kind", "") != "bad_op":
+                raise
+            self._server_catalog = False
+            return False
+        self._server_catalog = True
+        return True
+
+    def catalog_remove(self, key: str) -> bool:
+        """Drop one record from the server-side catalog (idempotent)."""
+        if self._server_catalog is False:
+            return False
+        try:
+            self._request({"op": "catalog_remove", "key": key})
+        except StoreUnreachable:
+            return False
+        except RemoteStoreError as e:
+            if getattr(e, "kind", "") != "bad_op":
+                raise
+            self._server_catalog = False
+            return False
+        self._server_catalog = True
+        return True
+
+    def catalog_query(self, query_doc: dict[str, Any]) -> "list[dict[str, Any]] | None":
+        """Run a catalog query server-side.  ``None`` (vs ``[]``) means the
+        answer is unavailable — pre-catalog server or pool unreachable — so
+        the caller can fall back to its local view."""
+        if self._server_catalog is False:
+            return None
+        try:
+            resp, _ = self._request({"op": "catalog_query", "query": query_doc})
+        except StoreUnreachable:
+            return None
+        except RemoteStoreError as e:
+            if getattr(e, "kind", "") != "bad_op":
+                raise
+            self._server_catalog = False
+            return None
+        self._server_catalog = True
+        return list(resp.get("results", ()))
 
     # -- coordination ----------------------------------------------------------
     def lease_acquire(

@@ -31,12 +31,15 @@ from __future__ import annotations
 
 import hashlib
 import itertools
+import json
 import os
 import socket
 import threading
 import time
 from typing import Any
 
+from ..catalog.index import CatalogIndex
+from ..catalog.records import CatalogQuery, CatalogRecord
 from ..core.backends import StorageBackend
 from .protocol import (
     DEFAULT_CHUNK_BYTES,
@@ -124,6 +127,13 @@ class StoreServer:
         # restart, dropped on delete.
         self._digest_lock = threading.Lock()
         self._digests: dict[tuple[str, str], str] = {}
+        # server-side catalog slice: the provenance index for the artifacts
+        # this shard holds.  Lives here (not client-side) so it survives
+        # client churn; persisted as catalog.json through the backend with
+        # the same batched-flush discipline as the store's index.json.
+        self.catalog = CatalogIndex()
+        self.catalog_flush_every = 64
+        self._catalog_flushed = 0
         # monotonic, not wall: uptime and every lease-wait deadline in this
         # process must be immune to NTP steps — a wall-clock jump must never
         # expire (or extend) a lease or report negative uptime
@@ -134,6 +144,7 @@ class StoreServer:
         if self._listener is not None:
             raise RuntimeError("server already started")
         self._stopping.clear()
+        self._load_catalog()
         ls = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         ls.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         ls.bind((self.host, self.port))
@@ -167,6 +178,7 @@ class StoreServer:
         if self._accept_thread is not None:
             self._accept_thread.join(timeout=5)
             self._accept_thread = None
+        self._flush_catalog()
 
     def wait(self) -> None:
         """Block until :meth:`stop` is called (signal handler, other thread)."""
@@ -512,6 +524,10 @@ class StoreServer:
         key = req["key"]
         self.backend.delete(key)
         self._forget_digests(key)
+        # keep the provenance index consistent with the blobs it describes:
+        # an evicted artifact must never be reported as present by a query
+        if self.catalog.discard(key):
+            self._catalog_dirty()
         conn.send({"ok": True})
         self._broadcast(
             {"event": "evicted", "key": key}, skip_client=req.get("client_id", "")
@@ -546,7 +562,7 @@ class StoreServer:
             {
                 "ok": True,
                 "proto": PROTO_VERSION,
-                "features": ["chunked", "batch"],
+                "features": ["chunked", "batch", "catalog"],
             }
         )
 
@@ -621,6 +637,75 @@ class StoreServer:
             return {"ok": False, "error": str(e), "kind": "not_found"}
         except Exception as e:  # noqa: BLE001 - per-sub-op fault isolation
             return {"ok": False, "error": f"{type(e).__name__}: {e}", "kind": "server"}
+
+    # -- catalog ops -----------------------------------------------------------
+    # one query's results ride in the response header (1 MiB cap): bound them
+    _CATALOG_MAX_LIMIT = 1000
+
+    def _load_catalog(self) -> None:
+        """Restore the persisted catalog slice, pruning records whose
+        artifacts vanished while the server was down (crashed writer, disk
+        wipe) — the index must never promise a blob the backend lost."""
+        try:
+            raw = self.backend.read_meta("catalog.json")
+        except Exception:  # noqa: BLE001 - a damaged snapshot must not stop startup
+            return
+        if not raw:
+            return
+        try:
+            docs = json.loads(raw)
+        except json.JSONDecodeError:
+            return
+        if isinstance(docs, list):
+            self.catalog.load(docs)
+            try:
+                self.catalog.prune(self.backend.exists)
+            except Exception:  # noqa: BLE001
+                pass
+        self._catalog_flushed = self.catalog.mutations
+
+    def _flush_catalog(self) -> None:
+        if self.catalog.mutations == self._catalog_flushed:
+            return
+        try:
+            self.backend.write_meta("catalog.json", json.dumps(self.catalog.snapshot()))
+        except Exception:  # noqa: BLE001 - persistence is a cache, not truth
+            return
+        self._catalog_flushed = self.catalog.mutations
+
+    def _catalog_dirty(self) -> None:
+        if self.catalog.mutations - self._catalog_flushed >= self.catalog_flush_every:
+            self._flush_catalog()
+
+    def _op_catalog_put(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        doc = req.get("doc")
+        if not isinstance(doc, dict):
+            conn.send({"ok": False, "error": "catalog_put needs a doc", "kind": "bad_op"})
+            return
+        try:
+            rec = CatalogRecord.from_doc(doc)
+        except (KeyError, ValueError, TypeError) as e:
+            conn.send({"ok": False, "error": f"bad catalog doc: {e}", "kind": "bad_op"})
+            return
+        self.catalog.upsert(rec)
+        self._catalog_dirty()
+        conn.send({"ok": True})
+
+    def _op_catalog_remove(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        removed = self.catalog.discard(req["key"])
+        if removed:
+            self._catalog_dirty()
+        conn.send({"ok": True, "removed": removed})
+
+    def _op_catalog_query(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        try:
+            q = CatalogQuery.from_doc(req.get("query") or {})
+        except (ValueError, TypeError) as e:
+            conn.send({"ok": False, "error": f"bad catalog query: {e}", "kind": "bad_op"})
+            return
+        q.limit = min(q.limit, self._CATALOG_MAX_LIMIT)
+        results = [r.to_doc() for r in self.catalog.query(q)]
+        conn.send({"ok": True, "results": results, "total": len(self.catalog)})
 
     # -- coordination ops ------------------------------------------------------
     def _op_lease_acquire(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
@@ -707,6 +792,7 @@ class StoreServer:
             "active_leases": n_leases,
             "connections": n_conns,
             "subscribers": n_subs,
+            "catalog_records": len(self.catalog),
             "uptime_s": time.monotonic() - self._started_at,
         }
 

@@ -389,6 +389,74 @@ class ShardedBackend(StorageBackend):
             return None  # every reachable shard agrees it is absent
         raise StoreUnreachable(f"no shard reachable for read_meta {name!r}") from last
 
+    # -- catalog ops -------------------------------------------------------------
+    def catalog_put(self, doc: dict[str, Any]) -> bool:
+        """Mirror a catalog record onto the SAME replica set as the blob it
+        describes — when a shard dies, the survivors that still serve the
+        artifact also still answer queries about it.  Like ``write_blob``
+        this dials replicas inside their down-cooldown (a skipped mirror
+        would leave a replica serving a blob its catalog has never heard
+        of).  True when >= 1 replica accepted."""
+        key = str(doc.get("key", ""))
+        if not key:
+            return False
+        landed = False
+        for node in self._replicas(key):
+            try:
+                ok = self._shards[node].catalog_put(doc)
+            except BackendUnavailable:
+                self._mark_down(node)
+                continue
+            self._mark_up(node)
+            landed = landed or ok
+        return landed
+
+    def catalog_remove(self, key: str) -> bool:
+        """Drop a record on every replica (mirrors ``delete``'s discipline:
+        cooldown shards are dialed too — a skipped removal is a future
+        phantom)."""
+        reached = False
+        for node in self._replicas(key):
+            try:
+                ok = self._shards[node].catalog_remove(key)
+            except BackendUnavailable:
+                self._mark_down(node)
+                continue
+            self._mark_up(node)
+            reached = reached or ok
+        return reached
+
+    def catalog_query(self, query_doc: dict[str, Any]) -> "list[dict[str, Any]] | None":
+        """Fan the query out to every live shard and merge, deduplicating by
+        key (replication means up to R shards answer for one artifact —
+        keep the copy with the freshest stats).  ``None`` only when no shard
+        answered at all; a partial cluster still returns what the reachable
+        shards know, which is exactly the replica-surviving answer the
+        kill-one-shard guarantee needs."""
+        to_try, _ = self._candidates(self.nodes)
+        merged: dict[str, dict[str, Any]] = {}
+        answered = False
+        for node in to_try:
+            try:
+                results = self._shards[node].catalog_query(query_doc)
+            except BackendUnavailable:
+                self._mark_down(node)
+                continue
+            self._mark_up(node)
+            if results is None:  # pre-catalog shard: no vote either way
+                continue
+            answered = True
+            for doc in results:
+                key = str(doc.get("key", ""))
+                old = merged.get(key)
+                if old is None or float(doc.get("last_used_at", 0) or 0) > float(
+                    old.get("last_used_at", 0) or 0
+                ):
+                    merged[key] = doc
+        if not answered:
+            return None
+        return list(merged.values())
+
     # -- coordination ----------------------------------------------------------
     def lease_acquire(
         self, key: str, *, wait: bool = True, timeout_s: float = 300.0

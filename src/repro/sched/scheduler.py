@@ -125,6 +125,8 @@ class DagScheduler:
     # (GIL escape); scheduling/store/admission stay in this process.  The
     # dispatcher's lifecycle belongs to its creator, not to close().
     dispatcher: NodeDispatcher | None = None
+    # optional repro.catalog.Catalog (duck-typed; see admit_and_store)
+    catalog: Any = None
 
     def __post_init__(self) -> None:
         if not isinstance(self.registry, ModuleRegistry):
@@ -148,8 +150,11 @@ class DagScheduler:
 
     def _on_store_evict(self, key: str) -> None:
         # plain GIL-atomic pop: never take the policy lock from inside the
-        # store lock (see docs/scheduler.md lock ordering)
+        # store lock (see docs/scheduler.md lock ordering); Catalog.discard
+        # is in-memory only, so it is equally safe here
         self.policy.stored.pop(key, None)
+        if self.catalog is not None:
+            self.catalog.discard(key)
 
     def close(self) -> None:
         self._pool.shutdown(wait=True)
@@ -382,6 +387,8 @@ class DagScheduler:
             else:
                 with self._pending_lock:  # store request satisfied by the load
                     self._pending_stores.discard(key)
+                if self.catalog is not None:  # refresh reuse counters for ranking
+                    self.catalog.touch(key, self.store.records.get(key))
                 with ctx.lock:
                     ctx.load_s += time.perf_counter() - t0
                 return "loaded", value
@@ -436,6 +443,7 @@ class DagScheduler:
                     prefix,
                     value,
                     measured or None,
+                    catalog=self.catalog,
                 )
                 with ctx.lock:
                     ctx.store_s += ssec
@@ -462,6 +470,8 @@ class DagScheduler:
                 continue
             if state == "absent":
                 self.store.put(key, value)
+                if self.catalog is not None:
+                    self.catalog.publish(prefix, key, self.store.records.get(key))
             self.policy.stored.setdefault(
                 key, StoredRecord(prefix, self.policy.n_pipelines)
             )

@@ -76,6 +76,7 @@ class WorkflowService:
         singleflight: "SingleFlight | None" = None,
         dispatcher: "NodeDispatcher | None" = None,
         max_pending: int | None = None,
+        catalog: Any = None,
     ) -> None:
         if max_pending is not None and max_pending < 1:
             raise ValueError("max_pending must be >= 1 (or None for unbounded)")
@@ -89,6 +90,7 @@ class WorkflowService:
             cost_model=cost_model,
             singleflight=singleflight if singleflight is not None else SingleFlight(),
             dispatcher=dispatcher,
+            catalog=catalog,
         )
         self._lock = threading.Lock()
         self._t_first: float | None = None
@@ -118,6 +120,10 @@ class WorkflowService:
     @property
     def registry(self) -> ModuleRegistry:
         return self.scheduler.registry
+
+    @property
+    def catalog(self) -> Any:
+        return self.scheduler.catalog
 
     def register(self, spec: ModuleSpec) -> None:
         self.scheduler.register(spec)

@@ -1,0 +1,423 @@
+"""Provenance catalog: records, index, facade, Client.find, near misses.
+
+ISSUE 8's tentpole contract, unit-to-integration: canonical record/query
+documents, the posting-list index, event-driven consistency with the store
+(publish on admission, discard on eviction — never a scan of ``index.json``),
+the remote op family, and the two satellite fixes that ride along (shared
+``index.json`` re-parse skip, ``ToolState.to_config`` decode cache).
+"""
+import json
+import time
+
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import Client
+from repro.catalog import (
+    Catalog,
+    CatalogIndex,
+    CatalogQuery,
+    CatalogRecord,
+    rank_key,
+    record_for_prefix,
+    split_namespaced_dataset,
+)
+from repro.core import IntermediateStore, LocalFSBackend, MemoryBackend
+from repro.core.workflow import ModuleRef, PrefixKey, ToolState, encode_param
+from repro.net import RemoteBackend, StoreServer
+
+
+def _prefix(dataset="ds", chain=(("load", {"scale": 2}), ("norm", {"mode": "z"}))):
+    refs = tuple(
+        ModuleRef(m, ToolState.from_config(cfg)) for m, cfg in chain
+    )
+    return PrefixKey(dataset, refs)
+
+
+def _rec(dataset="ds", chain=(("load", {"scale": 2}), ("norm", {"mode": "z"})),
+         **stats):
+    p = _prefix(dataset, chain)
+    return record_for_prefix(p, p.key(True), **stats)
+
+
+# -- records / documents -------------------------------------------------------
+def test_split_namespaced_dataset():
+    assert split_namespaced_dataset("alice/ds1") == ("alice", "ds1")
+    assert split_namespaced_dataset("ds1") == ("", "ds1")
+    # only the FIRST separator splits: datasets may contain '/'
+    assert split_namespaced_dataset("a/b/c") == ("a", "b/c")
+
+
+def test_record_for_prefix_and_roundtrip():
+    rec = _rec("alice/ds1", nbytes=10, n_loads=3)
+    assert rec.namespace == "alice"
+    assert rec.dataset == "ds1"
+    assert rec.dataset_id == "alice/ds1"
+    assert rec.modules == ("load", "norm")
+    assert rec.module == "norm"
+    assert rec.depth == 2
+    # params are stored encoded, decoded on demand, typed
+    assert rec.params(0) == {"scale": 2}
+    assert rec.params() == {"mode": "z"}
+    # document round trip is exact
+    back = CatalogRecord.from_doc(json.loads(json.dumps(rec.to_doc())))
+    assert back == rec
+    # PrefixKey reconstruction reproduces the store key
+    assert back.prefix_key().key(True) == rec.key
+
+
+def test_query_build_encodes_typed_params():
+    q = CatalogQuery.build(module="load", params={"scale": 2})
+    assert q.params == {"scale": encode_param(2)}
+    rec_int = _rec(chain=(("load", {"scale": 2}),))
+    rec_str = _rec(chain=(("load", {"scale": "2"}),))
+    assert q.matches(rec_int)
+    assert not q.matches(rec_str), "31 != '31': typing is part of identity"
+    with pytest.raises(ValueError, match="module"):
+        CatalogQuery.build(params={"scale": 2})
+
+
+def test_query_matching_positions_and_scopes():
+    rec = _rec("alice/ds1")
+    assert CatalogQuery.build(module="norm").matches(rec)
+    assert not CatalogQuery.build(module="load").matches(rec)
+    assert CatalogQuery.build(module="load", any_position=True).matches(rec)
+    assert CatalogQuery.build(namespace="alice").matches(rec)
+    assert not CatalogQuery.build(namespace="").matches(rec)
+    assert CatalogQuery.build(dataset="ds1").matches(rec)
+    assert not CatalogQuery.build(dataset="other").matches(rec)
+    # repeated module id: params anchor to SOME position with that module
+    twice = _rec(chain=(("f", {"k": 1}), ("f", {"k": 2})))
+    assert CatalogQuery.build(module="f", params={"k": 1}, any_position=True).matches(twice)
+    assert not CatalogQuery.build(module="f", params={"k": 1}).matches(twice)
+    assert CatalogQuery.build(module="f", params={"k": 2}).matches(twice)
+
+
+def test_rank_key_orders_loads_depth_recency():
+    a = _rec("d1", (("m", {"k": 1}),), n_loads=5)
+    b = _rec("d2", (("m", {"k": 1}), ("m2", {})), n_loads=1, last_used_at=100.0)
+    c = _rec("d3", (("m", {"k": 1}),), n_loads=1, last_used_at=50.0)
+    assert sorted([c, b, a], key=rank_key) == [a, b, c]
+
+
+# -- index ---------------------------------------------------------------------
+def test_index_upsert_touch_discard():
+    idx = CatalogIndex()
+    rec = _rec(n_loads=1, last_used_at=10.0)
+    idx.upsert(rec)
+    assert len(idx) == 1 and rec.key in idx
+    # re-publish with staler stats keeps the best ones
+    idx.upsert(_rec(n_loads=0, last_used_at=5.0))
+    assert idx.get(rec.key).n_loads == 1
+    assert idx.touch(rec.key, last_used_at=20.0, n_loads=4)
+    assert idx.get(rec.key).n_loads == 4
+    assert idx.get(rec.key).last_used_at == 20.0
+    assert not idx.touch("missing", last_used_at=1.0, n_loads=1)
+    assert idx.discard(rec.key)
+    assert not idx.discard(rec.key), "discard is idempotent"
+    assert len(idx) == 0
+    assert idx.query(CatalogQuery.build(module="norm")) == []
+
+
+def test_index_query_uses_postings_but_stays_exact():
+    idx = CatalogIndex()
+    for i in range(20):
+        idx.upsert(_rec(f"ds{i}", (("load", {"scale": i}), ("norm", {"mode": "z"}))))
+    hits = idx.query(CatalogQuery.build(module="load", params={"scale": 7},
+                                        any_position=True))
+    assert [h.params(0) for h in hits] == [{"scale": 7}]
+    assert idx.query(CatalogQuery.build(module="norm", limit=5)) == sorted(
+        idx.query(CatalogQuery.build(module="norm", limit=100)), key=rank_key
+    )[:5]
+    assert idx.query(CatalogQuery.build(dataset="ds3"))[0].dataset == "ds3"
+
+
+def test_index_snapshot_load_and_prune():
+    idx = CatalogIndex()
+    idx.upsert(_rec("a/ds"))
+    idx.upsert(_rec("b/ds"))
+    docs = idx.snapshot()
+    fresh = CatalogIndex()
+    fresh.load(docs + [{"broken": True}, 42])  # malformed entries are skipped
+    assert len(fresh) == 2
+    keep = {r.key for r in fresh.query(CatalogQuery.build(namespace="a"))}
+    fresh.prune(lambda k: k in keep)
+    assert len(fresh) == 1
+    assert fresh.query(CatalogQuery.build(namespace="b")) == []
+
+
+# -- facade: local persistence + verification ----------------------------------
+def test_catalog_persists_and_reloads(tmp_path):
+    backend = LocalFSBackend(tmp_path)
+    cat = Catalog(backend)
+    assert cat.persist
+    rec = cat.publish(_prefix("alice/ds1"), _prefix("alice/ds1").key(True))
+    cat.flush()
+    reborn = Catalog(LocalFSBackend(tmp_path))
+    assert [r.key for r in reborn.find(module="norm")] == [rec.key]
+    # discard + flush survives a reload too
+    reborn.discard(rec.key)
+    reborn.flush()
+    assert Catalog(LocalFSBackend(tmp_path)).find(module="norm") == []
+
+
+def test_verify_present_drops_and_prunes(tmp_path):
+    cat = Catalog(LocalFSBackend(tmp_path))
+    a = cat.publish(_prefix("ds1"), "k-a")
+    b = cat.publish(_prefix("ds2"), "k-b")
+    c = cat.publish(_prefix("ds3"), "k-c")
+    kept = cat.verify_present(
+        [a, b, c], {"k-a": "present", "k-b": "absent", "k-c": "unreachable"}
+    )
+    assert [r.key for r in kept] == ["k-a"]
+    # authoritative absence pruned the index; unreachable stayed indexed
+    assert "k-b" not in cat.index
+    assert "k-c" in cat.index
+
+
+# -- satellite: shared index.json re-parse skip --------------------------------
+def test_shared_index_skips_reparse_when_bytes_unchanged():
+    store = IntermediateStore(backend=MemoryBackend())
+    store.backend.write_meta(
+        "index.json", json.dumps({"k": {"key": "k", "nbytes_raw": 4,
+                                        "nbytes_disk": 4, "save_s": 0.1}})
+    )
+    with store._lock:
+        first = store._shared_index()
+        # force TTL expiry; the meta bytes have NOT changed
+        ts, raw, parsed = store._shared_index_cache
+        store._shared_index_cache = (ts - 1e6, raw, parsed)
+        again = store._shared_index()
+        assert again is first, "unchanged bytes must reuse the cached parse"
+        # a real change does re-parse
+        store.backend.write_meta("index.json", json.dumps({}))
+        ts, raw, parsed = store._shared_index_cache
+        store._shared_index_cache = (ts - 1e6, raw, parsed)
+        changed = store._shared_index()
+        assert changed == {} and changed is not first
+
+
+# -- satellite: ToolState decode cache -----------------------------------------
+def test_toolstate_to_config_caches_decode():
+    ts = ToolState.from_config({"a": (1, 2), "b": 3.5, "c": "x"})
+    one = ts.to_config()
+    assert one == {"a": (1, 2), "b": 3.5, "c": "x"}
+    cached = ts._decoded
+    two = ts.to_config()
+    assert ts._decoded is cached, "decode runs once per instance"
+    assert two == one and two is not one, "callers get independent copies"
+    two["a"] = None
+    assert ts.to_config() == one
+
+
+# -- client integration: publish/find/evict/near-miss --------------------------
+def _client(tmp_path, **kw):
+    c = Client(str(tmp_path / "store"), **kw)
+    c.register_fn("load", lambda d, scale=1: [x * scale for x in d], scale=1)
+    c.register_fn("norm", lambda d, mode="z": d, mode="z")
+    return c
+
+
+def _run_chain(c, scale, mode="z", dataset="ds1", times=2):
+    for _ in range(times):  # PT admits at support >= 2
+        spec = c.spec(dataset)
+        spec.chain([("load", {"scale": scale}), ("norm", {"mode": mode})])
+        r = c.run(spec, [1, 2, 3])
+    return r
+
+
+def test_client_find_in_process(tmp_path):
+    c = _client(tmp_path, namespace="alice")
+    try:
+        _run_chain(c, scale=2)
+        _run_chain(c, scale=3)
+        hits = c.find(module="norm", params={"mode": "z"})
+        assert len(hits) == 2
+        assert all(h.namespace == "alice" for h in hits)
+        assert {h.params(0)["scale"] for h in hits} == {2, 3}
+        # terminal-module anchoring: 'load' produced no terminal artifact here
+        assert c.find(module="load", params={"scale": 2}) == []
+        assert len(c.find(module="load", any_position=True)) == 2
+        # namespace scoping: the bound namespace is the default scope
+        assert c.find(module="norm", namespace="bob") == []
+        assert len(c.find(module="norm", namespace="*")) == 2
+    finally:
+        c.close()
+
+
+def test_client_find_never_reports_evicted(tmp_path):
+    c = _client(tmp_path)
+    try:
+        _run_chain(c, scale=2)
+        hits = c.find(module="norm")
+        assert len(hits) == 1
+        key = hits[0].key
+        c.store.evict(key)
+        assert c.find(module="norm") == [], "zero-phantom: evicted => invisible"
+        assert key not in c.catalog.index
+    finally:
+        c.close()
+
+
+def test_catalog_survives_client_restart_local(tmp_path):
+    c = _client(tmp_path)
+    try:
+        _run_chain(c, scale=2)
+    finally:
+        c.close()
+    c2 = Client(str(tmp_path / "store"))
+    try:
+        hits = c2.find(module="norm")
+        assert len(hits) == 1, "catalog.json persists across client restarts"
+    finally:
+        c2.close()
+
+
+def test_recommender_near_misses(tmp_path):
+    c = _client(tmp_path, namespace="alice")
+    try:
+        _run_chain(c, scale=2)
+        _run_chain(c, scale=3)
+        _run_chain(c, scale=3, mode="minmax")
+        spec = c.spec("ds1")
+        spec.chain([("load", {"scale": 7}), ("norm", {"mode": "z"})])
+        report = c.recommend(spec)
+        # scale=2 and scale=3 stored chains differ from scale=7 by exactly
+        # the one param; the (3, minmax) chain differs by two and is excluded
+        notes = [s.note for s in report.near_misses]
+        assert len(notes) == 2
+        assert all("load.scale=" in n and "(yours 7)" in n for n in notes)
+        assert all(s.kind == "near_miss" for s in report.near_misses)
+        # an exact stored match is a reuse hit, not a near miss; the
+        # (scale=3, minmax) chain differs by TWO params and is excluded too
+        spec2 = c.spec("ds1")
+        spec2.chain([("load", {"scale": 2}), ("norm", {"mode": "z"})])
+        exact = c.recommend(spec2)
+        assert [s.note for s in exact.near_misses] == ["load.scale=3 (yours 2)"]
+    finally:
+        c.close()
+
+
+def test_near_miss_requires_single_diff():
+    from repro.api.recommend import Recommender
+
+    own = [{"a": encode_param(1), "b": encode_param(2)}]
+    same = [{"a": encode_param(1), "b": encode_param(2)}]
+    one = [{"a": encode_param(9), "b": encode_param(2)}]
+    two = [{"a": encode_param(9), "b": encode_param(8)}]
+    missing = [{"a": encode_param(1)}]
+    assert Recommender._one_param_diff(own, same, ("m",)) is None
+    assert "m.a=9 (yours 1)" == Recommender._one_param_diff(own, one, ("m",))
+    assert Recommender._one_param_diff(own, two, ("m",)) is None
+    assert "m.b=unset (yours 2)" == Recommender._one_param_diff(own, missing, ("m",))
+
+
+# -- remote: server op family + cross-client durability ------------------------
+@pytest.fixture()
+def server(tmp_path):
+    srv = StoreServer(LocalFSBackend(tmp_path / "pool")).start()
+    yield srv
+    srv.stop()
+
+
+def test_server_catalog_ops(server):
+    rb = RemoteBackend(f"127.0.0.1:{server.port}")
+    try:
+        rec = _rec("alice/ds1", n_loads=2)
+        assert rb.catalog_put(rec.to_doc())
+        assert server.stats()["catalog_records"] == 1
+        out = rb.catalog_query(CatalogQuery.build(module="norm").to_doc())
+        assert [d["key"] for d in out] == [rec.key]
+        assert rb.catalog_query(CatalogQuery.build(module="other").to_doc()) == []
+        assert rb.catalog_remove(rec.key)
+        assert server.stats()["catalog_records"] == 0
+    finally:
+        rb.close()
+
+
+def test_server_delete_prunes_catalog(server):
+    rb = RemoteBackend(f"127.0.0.1:{server.port}")
+    store = IntermediateStore(backend=rb)
+    try:
+        p = _prefix("ds1")
+        key = p.key(True)
+        store.put(key, jnp.ones((4,)))
+        assert rb.catalog_put(record_for_prefix(p, key).to_doc())
+        store.evict(key)  # -> backend.delete -> server-side catalog prune
+        assert server.catalog.get(key) is None
+    finally:
+        rb.close()
+
+
+def test_server_catalog_persists_across_restart(tmp_path):
+    backend_dir = tmp_path / "pool"
+    srv = StoreServer(LocalFSBackend(backend_dir)).start()
+    rb = RemoteBackend(f"127.0.0.1:{srv.port}")
+    rec = _rec("ds-persist")
+    try:
+        assert rb.catalog_put(rec.to_doc())
+    finally:
+        rb.close()
+        srv.stop()  # flushes catalog.json
+    # the restarted server prunes entries whose blob is gone
+    srv2 = StoreServer(LocalFSBackend(backend_dir)).start()
+    try:
+        assert len(srv2.catalog) == 0, "blobless records are pruned at load"
+    finally:
+        srv2.stop()
+
+
+def test_server_catalog_restart_keeps_live_records(tmp_path):
+    backend_dir = tmp_path / "pool"
+    srv = StoreServer(LocalFSBackend(backend_dir)).start()
+    rb = RemoteBackend(f"127.0.0.1:{srv.port}")
+    store = IntermediateStore(backend=rb)
+    p = _prefix("ds1")
+    key = p.key(True)
+    try:
+        store.put(key, jnp.ones((4,)))
+        assert rb.catalog_put(record_for_prefix(p, key).to_doc())
+    finally:
+        rb.close()
+        srv.stop()
+    srv2 = StoreServer(LocalFSBackend(backend_dir)).start()
+    rb2 = RemoteBackend(f"127.0.0.1:{srv2.port}")
+    try:
+        out = rb2.catalog_query(CatalogQuery.build(module="norm").to_doc())
+        assert [d["key"] for d in out] == [key]
+    finally:
+        rb2.close()
+        srv2.stop()
+
+
+def test_remote_backend_degrades_without_catalog_support(server):
+    rb = RemoteBackend(f"127.0.0.1:{server.port}")
+    try:
+        # simulate an old server: force the negotiation flag
+        rb._server_catalog = False
+        assert not rb.catalog_put(_rec().to_doc())
+        assert rb.catalog_query(CatalogQuery.build(module="m").to_doc()) is None
+        assert not rb.catalog_remove("k")
+    finally:
+        rb.close()
+
+
+def test_client_remote_catalog_survives_client_churn(server, tmp_path):
+    url = f"127.0.0.1:{server.port}"
+    c = Client(store_url=url, namespace="alice")
+    c.register_fn("load", lambda d, scale=1: [x * scale for x in d], scale=1)
+    c.register_fn("norm", lambda d, mode="z": d, mode="z")
+    try:
+        _run_chain(c, scale=2)
+    finally:
+        c.close()
+    # a brand-new client (empty local index) answers from the server's index
+    c2 = Client(store_url=url, namespace="alice")
+    try:
+        hits = c2.find(module="norm")
+        assert len(hits) == 1
+        assert c2.catalog.remote_queries == 1
+        assert len(c2.catalog.index) == 0
+    finally:
+        c2.close()

@@ -632,3 +632,93 @@ class TestShutdown:
             if proc.poll() is None:
                 proc.kill()
                 proc.communicate(timeout=10)
+
+
+# -- provenance-catalog browse (ISSUE 8) --------------------------------------
+
+class TestArtifactsEndpoint:
+    def _seed(self, gw, token, factor, namespace=None, runs=2):
+        """Run the nums chain until the policy admits it (PT: support >= 2)."""
+        spec = WorkflowSpec.from_steps(
+            "nums", ["normalize", ("scale", {"factor": factor})]
+        ).to_dict()
+        body = {"spec": spec, "data": [1.0, 2.0, 3.0], "wait": True}
+        if namespace is not None:
+            body["namespace"] = namespace
+        for _ in range(runs):
+            st, doc, _ = _request(gw.url, "POST", "/v1/workflows", token, body)
+            assert st == 200 and doc["status"] == "done", doc
+
+    def test_artifacts_are_tenant_scoped(self, gateway):
+        self._seed(gateway, "tok-a", factor=2.0)
+        st, doc, _ = _request(gateway.url, "GET", "/v1/artifacts?module=scale", "tok-a")
+        assert st == 200
+        assert doc["namespace"] == "tenant:alice"
+        assert doc["count"] >= 1
+        art = doc["artifacts"][0]
+        assert art["modules"][-1] == "scale"
+        assert art["params"][-1] == {"factor": 2.0}
+        assert art["key"].startswith("tenant:alice/nums::")
+        # bob's private view is empty; alice's artifacts are invisible to him
+        st, doc, _ = _request(gateway.url, "GET", "/v1/artifacts?module=scale", "tok-b")
+        assert st == 200 and doc["count"] == 0
+        # a foreign private namespace is a 403, not an empty answer
+        st, doc, _ = _request(
+            gateway.url, "GET", "/v1/artifacts?namespace=tenant:alice", "tok-b"
+        )
+        assert st == 403 and doc["error"] == "namespace_denied"
+
+    def test_artifacts_param_filter_is_typed(self, gateway):
+        self._seed(gateway, "tok-a", factor=2.0)
+        self._seed(gateway, "tok-a", factor=3.0)
+        st, doc, _ = _request(
+            gateway.url, "GET", "/v1/artifacts?module=scale&param.factor=2.0", "tok-a"
+        )
+        assert st == 200 and doc["count"] == 1
+        assert doc["artifacts"][0]["params"][-1] == {"factor": 2.0}
+        st, doc, _ = _request(
+            gateway.url, "GET", "/v1/artifacts?module=scale&param.factor=9.9", "tok-a"
+        )
+        assert st == 200 and doc["count"] == 0
+        # filters without a module anchor are a structured 400
+        st, doc, _ = _request(
+            gateway.url, "GET", "/v1/artifacts?param.factor=2.0", "tok-a"
+        )
+        assert st == 400 and doc["error"] == "bad_request"
+        st, doc, _ = _request(
+            gateway.url, "GET", "/v1/artifacts?module=scale&limit=nope", "tok-a"
+        )
+        assert st == 400
+
+    def test_shared_namespace_is_browsable_cross_tenant(self, gateway):
+        self._seed(gateway, "tok-a", factor=2.0, namespace="shared")
+        st, doc, _ = _request(
+            gateway.url, "GET", "/v1/artifacts?module=scale&namespace=shared", "tok-b"
+        )
+        assert st == 200 and doc["namespace"] == "shared" and doc["count"] >= 1
+        assert all(
+            a["key"].startswith("shared/") for a in doc["artifacts"]
+        )
+
+    def test_artifacts_never_report_evicted(self, gateway):
+        self._seed(gateway, "tok-a", factor=2.0)
+        st, doc, _ = _request(gateway.url, "GET", "/v1/artifacts?module=scale", "tok-a")
+        assert doc["count"] >= 1
+        for art in doc["artifacts"]:
+            gateway.client.store.evict(art["key"])
+        st, doc, _ = _request(gateway.url, "GET", "/v1/artifacts?module=scale", "tok-a")
+        assert st == 200 and doc["count"] == 0, doc
+
+    def test_recommend_surfaces_near_misses(self, gateway):
+        self._seed(gateway, "tok-a", factor=3.0)
+        # the recommend chain resolves the registry default factor=2.0 —
+        # one param away from the stored factor=3.0 artifact
+        st, doc, _ = _request(
+            gateway.url, "GET", "/v1/recommend?dataset=nums&modules=normalize,scale",
+            "tok-a",
+        )
+        assert st == 200, doc
+        assert doc["near_misses"], doc
+        nm = doc["near_misses"][0]
+        assert nm["kind"] == "near_miss"
+        assert "scale.factor=3.0 (yours 2.0)" == nm["note"]

@@ -530,3 +530,120 @@ def test_client_replication_validation():
         Client(policy="TSAR", replication=2)
     with pytest.raises(ValueError, match="replication"):
         Client(store_url="127.0.0.1:1", replication=2)
+
+
+# -- catalog over the cluster (ISSUE 8) ----------------------------------------
+def _catalog_client(urls, cid):
+    c = Client(store_url=urls, replication=2, policy="TSAR", client_id=cid)
+    c.register_fn("load", lambda d, scale=1: [x * scale for x in d], scale=1)
+    return c
+
+
+def _await_subscribers(servers, n, timeout=2.0):
+    deadline = time.monotonic() + timeout
+    while (
+        sum(s.stats()["subscribers"] for s in servers) < n
+        and time.monotonic() < deadline
+    ):
+        time.sleep(0.01)
+
+
+def test_catalog_writes_follow_blob_replica_sets(cluster3):
+    servers, urls = cluster3
+    c = _catalog_client(urls, "cat-route")
+    try:
+        for scale in range(4):
+            spec = c.spec("ds")
+            spec.chain([("load", {"scale": scale})])
+            c.run(spec, [1, 2, 3])
+        hits = c.find(module="load")
+        assert len(hits) == 4
+        # each record lives on exactly the shards that hold its blob
+        for h in hits:
+            replicas = set(c._remote._replicas(h.key))
+            for s in servers:
+                has_rec = s.catalog.get(h.key) is not None
+                assert has_rec == (_node_of(s) in replicas), h.key
+    finally:
+        c.close()
+
+
+def test_concurrent_evictions_event_delivery_and_catalog_convergence(cluster3):
+    """Satellite: concurrent evictions across the cluster — every eviction
+    event is delivered to the subscribed client (at-least-once; replicated
+    deletes may broadcast up to R times), and once the stream drains the
+    catalog never reports an evicted artifact as present."""
+    servers, urls = cluster3
+    c = _catalog_client(urls, "cat-evt")
+    try:
+        for scale in range(6):
+            spec = c.spec("ds")
+            spec.chain([("load", {"scale": scale})])
+            c.run(spec, [1, 2, 3])
+        keys = sorted(h.key for h in c.find(module="load"))
+        assert len(keys) == 6
+
+        seen: list[str] = []
+        c._remote.add_event_listener(
+            lambda ev, k: seen.append(k) if ev == "evicted" else None
+        )
+        _await_subscribers(servers, len(servers))
+
+        victims = keys[:3]
+        sb = _sharded(urls)
+        try:
+            threads = [
+                threading.Thread(target=sb.delete, args=(k,)) for k in victims
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            # drain: the victims leave the client's local records AND its
+            # catalog index via the event listeners
+            deadline = time.monotonic() + 5
+            while time.monotonic() < deadline and any(
+                k in c.catalog.index or k in c.store.records for k in victims
+            ):
+                time.sleep(0.02)
+
+            assert set(victims) <= set(seen), "every eviction must be delivered"
+            for k in victims:
+                assert k not in c.catalog.index
+                assert k not in c.store.records
+                # the shard-side indexes pruned on delete too
+                assert all(s.catalog.get(k) is None for s in servers)
+            # zero phantoms: find answers exactly the survivors
+            assert sorted(h.key for h in c.find(module="load")) == keys[3:]
+        finally:
+            sb.close()
+    finally:
+        c.close()
+
+
+def test_cluster_find_zero_phantoms_after_shard_kill(cluster3):
+    """Acceptance: kill one shard; ``Client.find`` answers from the replicas
+    and every returned record's artifact is verifiably present."""
+    servers, urls = cluster3
+    c = _catalog_client(urls, "cat-kill")
+    try:
+        for scale in range(5):
+            spec = c.spec("ds")
+            spec.chain([("load", {"scale": scale})])
+            c.run(spec, [1, 2, 3])
+        before = {h.key for h in c.find(module="load")}
+        assert len(before) == 5
+
+        servers[0].stop()
+        # a fresh client has no local index: answers come from the surviving
+        # shards' catalogs, then get presence-verified in one batched probe
+        c2 = _catalog_client(urls, "cat-kill-2")
+        try:
+            hits = c2.find(module="load")
+            assert {h.key for h in hits} == before, "replicas cover the dead shard"
+            presence = c2.store.has_state_many([h.key for h in hits])
+            assert all(v == "present" for v in presence.values()), presence
+        finally:
+            c2.close()
+    finally:
+        c.close()
