@@ -13,6 +13,7 @@ def main() -> None:
         bench_dag_scheduler,
         bench_eviction,
         bench_gateway,
+        bench_obs,
         bench_prefix_cache,
         bench_recommend,
         bench_remote_store,
@@ -38,6 +39,7 @@ def main() -> None:
         ("streaming (wire v2: chunked transfer + batched probes)", bench_streaming.run),
         ("gateway (HTTP front door: tenants, reuse, backpressure)", bench_gateway.run),
         ("catalog (ISSUE 8: find-by-statepoint vs linear scan, cluster fan-out)", bench_catalog.run),
+        ("obs (ISSUE 9: metrics/tracing hot-path overhead guard)", bench_obs.run),
         ("roofline (§Dry-run/§Roofline/§Perf)", roofline.run),
     ]
     print("name,us_per_call,derived")

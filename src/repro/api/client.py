@@ -23,6 +23,7 @@ import time
 from concurrent.futures import Future
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
+from ..core.backends import BackendUnavailable
 from ..core.cost import CostModel
 from ..core.executor import RunResult, WorkflowExecutor
 from ..core.provenance import ProvenanceLog
@@ -30,6 +31,8 @@ from ..core.registry import ModuleRegistry
 from ..core.risp import StoragePolicy, make_policy
 from ..core.store import IntermediateStore
 from ..core.workflow import ModuleRef, ModuleSpec, Workflow
+from ..obs import tracing as _tracing
+from ..obs.metrics import MetricsRegistry, merge_docs
 from ..sched.dag import DagWorkflow
 from ..sched.dispatch import NodeDispatcher
 from ..sched.scheduler import DagRunResult
@@ -118,6 +121,11 @@ class Client:
         self.namespace = check_namespace(namespace)
         self._remote: "RemoteBackend | ShardedBackend | None" = None
         singleflight: "SingleFlight | None" = None
+        # one metrics registry for every layer this client wires together
+        # (store, cache, shards, single-flight, service) — a pre-built store
+        # brings its own, which we adopt so all series still co-reside
+        metrics = store.metrics if store is not None else MetricsRegistry()
+        self.metrics = metrics
         if store_url is None and replication is not None:
             raise ValueError("replication only applies to a store_url cluster mount")
         if store_url is not None:
@@ -140,6 +148,7 @@ class Client:
                     store_url,
                     replication=replication if replication is not None else 2,
                     client_id=client_id,
+                    registry=metrics,
                 )
             else:
                 if replication is not None:
@@ -147,13 +156,18 @@ class Client:
                         "replication is a cluster-mode option; it needs a "
                         "multi-endpoint store_url (\"h:p1,h:p2,…\")"
                     )
-                self._remote = RemoteBackend(store_url, client_id=client_id)
-            cache = CachingBackend(self._remote, capacity_bytes=cache_bytes)
+                self._remote = RemoteBackend(
+                    store_url, client_id=client_id, registry=metrics
+                )
+            cache = CachingBackend(
+                self._remote, capacity_bytes=cache_bytes, registry=metrics
+            )
             store = IntermediateStore(
                 backend=cache,
                 capacity_bytes=capacity_bytes,
                 eviction=eviction if eviction is not None else "gain_loss",
                 codec=codec,
+                registry=metrics,
             )
             # fleet-wide evictions: purge the cache first, then drop local
             # records + policy bookkeeping via the store's listeners
@@ -163,7 +177,9 @@ class Client:
                     _store.on_external_evict(key)
 
             self._remote.add_event_listener(_on_event)
-            singleflight = DistributedSingleFlight(self._remote, stored_fn=store.has)
+            singleflight = DistributedSingleFlight(
+                self._remote, stored_fn=store.has, registry=metrics
+            )
         elif store is None:
             if root is None:
                 root = tempfile.mkdtemp(prefix="repro-store-")
@@ -172,6 +188,7 @@ class Client:
                 capacity_bytes=capacity_bytes,
                 eviction=eviction if eviction is not None else "gain_loss",
                 codec=codec,
+                registry=metrics,
             )
         elif any(v is not None for v in (root, capacity_bytes, eviction, codec)):
             raise ValueError(
@@ -310,12 +327,16 @@ class Client:
         spec: WorkflowSpec | Workflow | DagWorkflow,
         data: Any,
         on_state: Callable[[str], None] | None = None,
+        trace: "_tracing.TraceContext | None" = None,
     ) -> "Future[DagRunResult]":
         """Non-blocking submission onto the shared scheduler (chains run as
         chain DAGs).  Returns the run's future.  ``on_state`` (if given) is
         forwarded to :meth:`WorkflowService.submit` — it fires with
         ``"started"`` when a coordinator picks the run up and
-        ``"finished"``/``"failed"`` when it completes."""
+        ``"finished"``/``"failed"`` when it completes.  ``trace`` parents the
+        run's span under an inbound trace context (e.g. a gateway request);
+        without it the service mints a fresh trace when tracing is enabled.
+        The returned future carries the run's ``trace_id`` attribute."""
         self._mark_start()
         if isinstance(spec, WorkflowSpec):
             dag = self._bind_namespace(spec).to_dag(self.registry)
@@ -323,7 +344,7 @@ class Client:
             dag = DagWorkflow.from_workflow(spec, registry=self.registry)
         else:
             dag = spec
-        fut = self.service.submit(dag, data, on_state=on_state)
+        fut = self.service.submit(dag, data, on_state=on_state, trace=trace)
 
         def _done(f: "Future[DagRunResult]") -> None:
             try:
@@ -493,6 +514,33 @@ class Client:
                 else 0.0
             )
             return self._agg.snapshot(wall, singleflight_waits=sf.waits)
+
+    def metrics_doc(self) -> dict[str, Any]:
+        """Fabric-wide metrics document: this process's registry (store,
+        cache, shards-as-seen-from-here, scheduler, single-flight) merged
+        with the server-side registries of every reachable store server when
+        a remote pool is mounted.  Server series arrive stamped with a
+        ``shard`` label so gauges from different processes never collapse
+        into one meaningless sum.  Render with
+        :func:`repro.obs.metrics.render_prometheus`."""
+        docs: list[dict[str, Any]] = [self.metrics.to_doc()]
+        extras: list[dict[str, str] | None] = [None]
+        remote = self._remote
+        if remote is not None:
+            try:
+                server_doc = remote.metrics_doc()
+            except BackendUnavailable:
+                server_doc = None
+            if server_doc:
+                docs.append(server_doc)
+                # ShardedBackend stamps per-shard labels itself; a single
+                # RemoteBackend's doc still needs its endpoint stamped here
+                extras.append(
+                    None
+                    if hasattr(remote, "_shards")
+                    else {"shard": f"{remote.host}:{remote.port}"}
+                )
+        return merge_docs(docs, extras)
 
     def drain(self, timeout: float | None = None) -> None:
         self.service.drain(timeout)

@@ -20,6 +20,7 @@ from typing import Any, Mapping, Sequence
 
 import jax
 
+from ..obs import tracing as _tracing
 from .backends import BackendUnavailable
 from .cost import CostModel
 from .provenance import ProvenanceLog, RunRecord
@@ -88,7 +89,10 @@ def probe_reusable_prefix(
     while node is not None:
         chain.append((node, node.key(policy.with_state)))
         node = node.parent()
-    states = store.has_state_many([key for _, key in chain]) if chain else {}
+    sp = _tracing.span("probe.prefix", kind="probe", depth=len(chain))
+    with sp:
+        states = store.has_state_many([key for _, key in chain]) if chain else {}
+        sp.set(present=sum(1 for s in states.values() if s == "present"))
     for candidate, key in chain:
         state = states.get(key, "unreachable")
         if state == "present":
@@ -222,6 +226,14 @@ class WorkflowExecutor:
         return self.registry.resolve_params(ref)
 
     def run_workflow(self, wf: Workflow, data: Any) -> RunResult:
+        with _tracing.span(
+            "run", kind="run", workflow=wf.workflow_id or wf.dataset_id
+        ) as run_sp:
+            result = self._run_workflow_traced(wf, data)
+            run_sp.set(n_skipped=result.n_skipped, stored=len(result.stored_keys))
+        return result
+
+    def _run_workflow_traced(self, wf: Workflow, data: Any) -> RunResult:
         t_start = time.perf_counter()
         rec: Recommendation = self.policy.step(wf)
 

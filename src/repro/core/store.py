@@ -32,6 +32,8 @@ import numpy as np
 
 import jax
 
+from ..obs import tracing as _tracing
+from ..obs.metrics import MetricsRegistry
 from .backends import BackendUnavailable, LocalFSBackend, StorageBackend
 from .codecs import Codec, resolve_codec
 from .eviction import EvictionContext, EvictionManager
@@ -102,6 +104,7 @@ class IntermediateStore:
         eviction: str | Any = "gain_loss",
         index_flush_every: int = 64,
         index_flush_interval_s: float = 1.0,
+        registry: MetricsRegistry | None = None,
     ) -> None:
         if backend is None:
             if root is None:
@@ -123,6 +126,31 @@ class IntermediateStore:
         # writes of ``index.json`` (evict listeners run while it is held —
         # they must not call back into the store or take the policy lock)
         self._lock = threading.RLock()
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_puts = m.counter("repro_store_puts_total", "artifacts persisted by the store")
+        self._m_gets = m.counter("repro_store_gets_total", "artifact loads served by the store")
+        self._m_put_seconds = m.histogram("repro_store_put_seconds", "store put latency")
+        self._m_get_seconds = m.histogram("repro_store_get_seconds", "store get latency")
+        self._m_evictions = m.counter(
+            "repro_store_evictions_total", "artifacts deleted by budget eviction"
+        )
+        self._m_evicted_bytes = m.counter(
+            "repro_store_evicted_bytes_total", "disk bytes reclaimed by eviction"
+        )
+        self._m_reuse_hits = m.counter(
+            "repro_reuse_hits_total", "artifact loads that replaced a recompute"
+        )
+        self._m_saved = m.counter(
+            "repro_reuse_seconds_saved_total",
+            "estimated compute seconds avoided by reuse (paper Ch. 4 time gain)",
+        )
+        m.gauge(
+            "repro_store_disk_bytes", "current disk footprint of stored artifacts"
+        ).unlabeled.set_function(lambda: self.total_disk_bytes)
+        m.gauge(
+            "repro_store_artifacts", "artifacts currently recorded"
+        ).unlabeled.set_function(lambda: len(self.records))
         self._load_index()
 
     @property
@@ -346,12 +374,18 @@ class IntermediateStore:
     def _evict_batch(self, keys: list[str]) -> None:
         """Drop artifacts + notify listeners without flushing per victim;
         callers flush the index once afterwards."""
+        sp = _tracing.span("store.evict", kind="store", n=len(keys)) if keys else None
         for key in keys:
-            if key in self.records:
+            rec = self.records.get(key)
+            if rec is not None:
                 self.backend.delete(key)
                 del self.records[key]
+                self._m_evictions.inc()
+                self._m_evicted_bytes.inc(rec.nbytes_disk)
             for fn in self._evict_listeners:
                 fn(key)
+        if sp is not None:
+            sp.end()
 
     def _enforce_budget(self, incoming: str) -> tuple[str, ...]:
         victims = self.evictor.select_victims(
@@ -373,8 +407,13 @@ class IntermediateStore:
         value (the executor passes the prefix's module seconds) — the *gain*
         numerator of the eviction criterion.
         """
-        with self._lock:
-            return self._put_locked(key, value, compute_seconds)
+        with _tracing.span("store.put", kind="store", key=key) as sp:
+            with self._lock:
+                res = self._put_locked(key, value, compute_seconds)
+            sp.set(nbytes=res.nbytes_disk, deduped=res.deduped, admitted=res.admitted)
+        self._m_puts.inc()
+        self._m_put_seconds.observe(res.seconds)
+        return res
 
     def _put_locked(
         self, key: str, value: Any, compute_seconds: float | None
@@ -456,8 +495,24 @@ class IntermediateStore:
         )
 
     def get(self, key: str, sharding: jax.sharding.Sharding | None = None) -> Any:
-        with self._lock:
-            return self._get_locked(key, sharding)
+        with _tracing.span("store.get", kind="store", key=key) as sp:
+            t0 = time.perf_counter()
+            with self._lock:
+                value = self._get_locked(key, sharding)
+                rec = self.records.get(key)
+                compute_s = rec.compute_s if rec is not None else None
+            dt = time.perf_counter() - t0
+            self._m_gets.inc()
+            self._m_get_seconds.observe(dt)
+            # every successful load is a reuse hit: the caller was about to
+            # recompute this prefix.  The realized time gain is the producer's
+            # measured compute cost minus what the load actually took.
+            self._m_reuse_hits.inc()
+            saved = max(0.0, (compute_s or 0.0) - dt)
+            if saved > 0.0:
+                self._m_saved.inc(saved)
+            sp.set(source="store", saved_s=round(saved, 6))
+        return value
 
     def _get_locked(self, key: str, sharding: jax.sharding.Sharding | None) -> Any:
         t0 = time.perf_counter()

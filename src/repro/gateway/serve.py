@@ -25,12 +25,15 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import signal
 import sys
 import threading
 
 from ..api.client import Client
 from ..core.registry import ModuleRegistry
+from ..obs.logging import configure_logging, get_logger
+from ..obs.tracing import configure_tracing
 from .auth import TokenAuthenticator
 from .server import DEFAULT_PORT, GatewayServer
 from .tenancy import SHARED_NAMESPACE, TenancyPolicy
@@ -131,7 +134,35 @@ def main(argv: list[str] | None = None) -> int:
         default=[],
         help=f"extra opt-in shared namespaces (default: {SHARED_NAMESPACE!r})",
     )
+    parser.add_argument(
+        "--log-level",
+        default="info",
+        choices=["debug", "info", "warning", "error", "critical"],
+        help="logging verbosity for the repro logger tree",
+    )
+    parser.add_argument(
+        "--log-json",
+        action="store_true",
+        help="emit JSON-lines logs instead of the human-readable format",
+    )
+    parser.add_argument(
+        "--trace-dir",
+        default=None,
+        help="record spans as NDJSON under this directory (enables tracing; "
+        "also reachable via REPRO_TRACE_DIR)",
+    )
+    parser.add_argument(
+        "--service",
+        default=os.environ.get("REPRO_SERVICE", "gateway"),
+        help="service name stamped on this process's spans "
+        "(default: $REPRO_SERVICE or 'gateway')",
+    )
     args = parser.parse_args(argv)
+
+    configure_logging(args.log_level, json_lines=args.log_json)
+    log = get_logger("gateway.serve")
+    if args.trace_dir:
+        configure_tracing(args.trace_dir, args.service)
 
     if not args.token:
         parser.error("at least one --token TOKEN=TENANT is required")
@@ -162,10 +193,9 @@ def main(argv: list[str] | None = None) -> int:
         own_client=True,
     )
     gateway.start()
-    print(
-        f"gateway listening on {gateway.url} "
-        f"(tenants={len(auth)}, modules={len(client.registry)})",
-        flush=True,
+    log.info(
+        "gateway listening on %s (tenants=%d, modules=%d)",
+        gateway.url, len(auth), len(client.registry),
     )
 
     done = threading.Event()
@@ -182,9 +212,9 @@ def main(argv: list[str] | None = None) -> int:
         done.wait()
     except KeyboardInterrupt:
         gateway.begin_shutdown()
-    print("gateway draining in-flight runs...", flush=True)
+    log.info("gateway draining in-flight runs...")
     gateway.close()
-    print("gateway stopped", flush=True)
+    log.info("gateway stopped")
     return 0
 
 

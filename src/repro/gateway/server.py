@@ -42,6 +42,9 @@ from ..api.client import Client
 from ..api.recommend import RecommendReport
 from ..api.spec import SpecError, WorkflowSpec
 from ..core.registry import ToolStateError, UnknownModuleError
+from ..obs import tracing as _tracing
+from ..obs.logging import get_logger
+from ..obs.metrics import render_prometheus
 from ..sched.scheduler import DagRunResult
 from ..sched.service import AdmissionRejected, ServiceClosed
 from ..sched.stats import TenantLedger
@@ -54,6 +57,8 @@ DEFAULT_MAX_BODY_BYTES = 1 << 20  # 1 MiB of JSON is a very large workflow
 _EVENT_STREAM_MAX_S = 300.0
 _WAIT_MAX_S = 300.0
 _MAX_RUNS_TRACKED = 10_000
+
+_log = get_logger("gateway")
 
 
 class _ApiError(Exception):
@@ -78,7 +83,7 @@ class RunHandle:
 
     __slots__ = (
         "run_id", "tenant", "namespace", "digest", "created_at",
-        "status", "events", "cond", "summary", "error",
+        "status", "events", "cond", "summary", "error", "trace_id",
     )
 
     def __init__(self, run_id: str, tenant: str, namespace: str, digest: str) -> None:
@@ -92,6 +97,7 @@ class RunHandle:
         self.cond = threading.Condition()
         self.summary: dict[str, Any] | None = None
         self.error: str | None = None
+        self.trace_id: str | None = None
 
     def add_event(self, event: str, **fields: Any) -> None:
         doc = {"event": event, "run_id": self.run_id, "ts": time.time(), **fields}
@@ -110,6 +116,8 @@ class RunHandle:
             "namespace": self.namespace,
             "digest": self.digest,
         }
+        if self.trace_id is not None:
+            doc["trace_id"] = self.trace_id
         if self.summary is not None:
             doc["result"] = self.summary
         if self.error is not None:
@@ -233,8 +241,21 @@ class GatewayServer:
         self._closed = False
         self._httpd: ThreadingHTTPServer | None = None
         self._thread: threading.Thread | None = None
-        self._counts_lock = threading.Lock()
-        self._counts: dict[str, int] = {}
+        # the gateway shares the client's registry — one metrics home for
+        # the whole process; GET /metrics renders it merged with the
+        # server-side registries of the mounted pool
+        self.metrics = client.metrics
+        self.ledger.bind_metrics(self.metrics)
+        self._m_requests = self.metrics.counter(
+            "repro_gateway_requests_total",
+            "gateway admission/submission outcomes",
+            ("op",),
+        )
+        self._m_http = self.metrics.counter(
+            "repro_gateway_http_responses_total",
+            "HTTP responses sent, by status code",
+            ("status",),
+        )
         # live quota: evictions (local budget or fleet-wide events) credit
         # the billed tenant's bytes back
         client.store.add_evict_listener(self.ledger.credit_evicted)
@@ -290,12 +311,28 @@ class GatewayServer:
 
     # -- bookkeeping -----------------------------------------------------------
     def _count(self, what: str) -> None:
-        with self._counts_lock:
-            self._counts[what] = self._counts.get(what, 0) + 1
+        if what.startswith("http_"):
+            self._m_http.labels(status=what[len("http_"):]).inc()
+        else:
+            self._m_requests.labels(op=what).inc()
 
     def counts(self) -> dict[str, int]:
-        with self._counts_lock:
-            return dict(self._counts)
+        """Deprecated alias surface: the legacy flat dict, reconstructed from
+        ``repro_gateway_requests_total{op}`` and
+        ``repro_gateway_http_responses_total{status}``
+        (see ``repro/obs/naming.py``)."""
+        out: dict[str, int] = {}
+        for s in self._m_requests.series():
+            out[s["labels"]["op"]] = int(s["value"] or 0)
+        for s in self._m_http.series():
+            out[f"http_{s['labels']['status']}"] = int(s["value"] or 0)
+        return out
+
+    def metrics_text(self) -> str:
+        """The fabric-wide Prometheus exposition behind ``GET /metrics``:
+        this process's registry (gateway + client + scheduler + store +
+        cache) merged with every reachable store server's registry."""
+        return render_prometheus(self.client.metrics_doc())
 
     def _track(self, handle: RunHandle) -> None:
         with self._runs_lock:
@@ -325,6 +362,25 @@ class GatewayServer:
         spec: WorkflowSpec,
         data: Any,
         requested_namespace: str | None,
+        trace: "_tracing.TraceContext | None" = None,
+    ) -> RunHandle:
+        """Admit + submit one run.  ``trace`` is the inbound trace context
+        (parsed from the HTTP ``traceparent`` header); when tracing is
+        enabled the gateway opens a ``gateway.submit`` span under it and
+        parents the run's span there, so one trace covers
+        gateway → scheduler → store → shards across processes."""
+        gsp = _tracing.span("gateway.submit", kind="server", parent=trace, tenant=tenant)
+        with gsp:
+            return self._submit(tenant, spec, data, requested_namespace, trace, gsp)
+
+    def _submit(
+        self,
+        tenant: str,
+        spec: WorkflowSpec,
+        data: Any,
+        requested_namespace: str | None,
+        trace: "_tracing.TraceContext | None",
+        gsp: Any,
     ) -> RunHandle:
         if self._draining:
             raise _ApiError(
@@ -356,6 +412,14 @@ class GatewayServer:
 
         run_id = f"r-{secrets.token_hex(8)}"
         handle = RunHandle(run_id, tenant, namespace, spec.digest)
+        # parent the run's span under the gateway span when one is live,
+        # else pass the raw inbound context straight through
+        if getattr(gsp, "trace_id", None):
+            gsp.set(run_id=run_id, namespace=namespace)
+            child = _tracing.TraceContext(gsp.trace_id, gsp.span_id)
+        else:
+            child = trace
+        handle.trace_id = child.trace_id if child is not None else None
         self._track(handle)
         handle.add_event(
             "accepted", namespace=namespace, digest=spec.digest, tenant=tenant
@@ -367,7 +431,7 @@ class GatewayServer:
                 handle.add_event("started")
 
         try:
-            fut = self.client.submit(spec, data, on_state=_on_state)
+            fut = self.client.submit(spec, data, on_state=_on_state, trace=child)
         except AdmissionRejected as e:
             self.admission.cancel(tenant)
             handle.status = "failed"
@@ -386,6 +450,10 @@ class GatewayServer:
             raise _ApiError(503, "draining", str(e), {"Retry-After": "1"}) from None
 
         self._count("accepted")
+        _log.info(
+            "run %s accepted (tenant=%s namespace=%s trace=%s)",
+            run_id, tenant, namespace, handle.trace_id or "-",
+        )
 
         def _done(f: Any) -> None:
             try:
@@ -395,6 +463,10 @@ class GatewayServer:
                 handle.status = "failed"
                 self.admission.release(handle.tenant, failed=True)
                 handle.add_event("failed", message=handle.error)
+                _log.warning(
+                    "run %s failed (tenant=%s): %s",
+                    handle.run_id, handle.tenant, handle.error,
+                )
             else:
                 handle.summary = _summarize(result)
                 for key in result.stored_keys:
@@ -503,8 +575,10 @@ class _GatewayHandler(BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"
     server_version = "repro-gateway"
 
-    def log_message(self, fmt: str, *args: Any) -> None:  # noqa: D102 - quiet
-        pass
+    def log_message(self, fmt: str, *args: Any) -> None:  # noqa: D102
+        # http.server's per-request stderr chatter becomes debug-level
+        # structured logging (visible with --log-level debug)
+        _log.debug("%s %s", self.address_string(), fmt % args)
 
     # -- plumbing ------------------------------------------------------------
     def _send_json(
@@ -568,6 +642,19 @@ class _GatewayHandler(BaseHTTPRequestHandler):
                 self._send_json(
                     200, {"ok": True, "draining": self.gateway.draining}
                 )
+                return
+            if url.path == "/metrics":
+                # unauthenticated like /healthz: an operational scrape
+                # surface, not a tenant data surface
+                body = self.gateway.metrics_text().encode()
+                self.send_response(200)
+                self.send_header(
+                    "Content-Type", "text/plain; version=0.0.4; charset=utf-8"
+                )
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+                self.gateway._count("http_200")
                 return
             tenant = self._authenticate()
             if parts[:1] == ["v1"] and parts[1:2] == ["runs"] and len(parts) == 3:
@@ -664,7 +751,10 @@ class _GatewayHandler(BaseHTTPRequestHandler):
                 raise _ApiError(422, "invalid_spec", str(e)) from None
             if namespace is None and spec.namespace:
                 namespace = spec.namespace
-            handle = self.gateway.submit(tenant, spec, data, namespace)
+            trace = _tracing.TraceContext.from_traceparent(
+                self.headers.get("traceparent")
+            )
+            handle = self.gateway.submit(tenant, spec, data, namespace, trace=trace)
             if wait:
                 self._wait_terminal(handle)
                 self._send_json(200, handle.describe())

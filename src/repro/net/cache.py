@@ -34,6 +34,7 @@ import threading
 from collections import OrderedDict
 
 from ..core.backends import StorageBackend
+from ..obs.metrics import MetricsRegistry
 from .protocol import digest
 
 
@@ -47,6 +48,7 @@ class CachingBackend(StorageBackend):
         inner: StorageBackend,
         capacity_bytes: int = 256 * 1024 * 1024,
         max_entry_fraction: float = 0.5,
+        registry: MetricsRegistry | None = None,
     ) -> None:
         if not 0.0 < max_entry_fraction <= 1.0:
             raise ValueError("max_entry_fraction must be in (0, 1]")
@@ -66,22 +68,77 @@ class CachingBackend(StorageBackend):
         self._gen: dict[str, int] = {}  # key -> invalidation generation
         self._inflight: dict[str, int] = {}  # key -> fetches on the wire
         self._nbytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.validation_failures = 0
-        self.stale_inserts_dropped = 0  # fetches outrun by an invalidation
-        self.purge_examined = 0  # entries looked at by invalidations (O() proof)
-        self.oversize_rejected = 0  # blobs too large to be worth caching
+        # counters live on the unified registry; the bare attribute names
+        # survive as read-only aliases below
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_hits = m.counter("repro_cache_hits_total", "blob reads served locally")
+        self._m_misses = m.counter(
+            "repro_cache_misses_total", "blob reads that went to the inner backend"
+        )
+        self._m_validation_failures = m.counter(
+            "repro_cache_validation_failures_total",
+            "cached entries that failed digest re-verification",
+        )
+        self._m_stale_dropped = m.counter(
+            "repro_cache_stale_inserts_dropped_total",
+            "fetches outrun by an invalidation",
+        )
+        self._m_purge_examined = m.counter(
+            "repro_cache_purge_examined_total",
+            "entries looked at by invalidations (O() proof)",
+        )
+        self._m_oversize = m.counter(
+            "repro_cache_oversize_rejected_total",
+            "blobs too large to be worth caching",
+        )
+        m.gauge(
+            "repro_cache_bytes", "bytes currently held by the LRU"
+        ).unlabeled.set_function(lambda: self._nbytes)
+        m.gauge(
+            "repro_cache_entries", "blobs currently held by the LRU"
+        ).unlabeled.set_function(lambda: len(self._blobs))
+
+    # -- deprecated counter aliases ---------------------------------------------
+    @property
+    def hits(self) -> int:
+        """Deprecated alias of ``repro_cache_hits_total``."""
+        return int(self._m_hits.value)
+
+    @property
+    def misses(self) -> int:
+        """Deprecated alias of ``repro_cache_misses_total``."""
+        return int(self._m_misses.value)
+
+    @property
+    def validation_failures(self) -> int:
+        """Deprecated alias of ``repro_cache_validation_failures_total``."""
+        return int(self._m_validation_failures.value)
+
+    @property
+    def stale_inserts_dropped(self) -> int:
+        """Deprecated alias of ``repro_cache_stale_inserts_dropped_total``."""
+        return int(self._m_stale_dropped.value)
+
+    @property
+    def purge_examined(self) -> int:
+        """Deprecated alias of ``repro_cache_purge_examined_total``."""
+        return int(self._m_purge_examined.value)
+
+    @property
+    def oversize_rejected(self) -> int:
+        """Deprecated alias of ``repro_cache_oversize_rejected_total``."""
+        return int(self._m_oversize.value)
 
     # -- cache bookkeeping (callers hold the lock) ---------------------------
     def _insert(self, key: str, name: str, data: bytes, gen: int) -> None:
         if self._gen.get(key, 0) != gen:
             # an eviction event landed while the bytes were in flight:
             # inserting now would resurrect a dead blob
-            self.stale_inserts_dropped += 1
+            self._m_stale_dropped.inc()
             return
         if len(data) > self.max_entry_bytes:
-            self.oversize_rejected += 1
+            self._m_oversize.inc()
             return
         ck = (key, name)
         prev = self._blobs.pop(ck, None)
@@ -136,7 +193,7 @@ class CachingBackend(StorageBackend):
         if not names:
             return
         for name in names:
-            self.purge_examined += 1
+            self._m_purge_examined.inc()
             self._drop_entry(key, name)
 
     def invalidate(self, key: str) -> None:
@@ -172,17 +229,16 @@ class CachingBackend(StorageBackend):
             # hash OUTSIDE the lock: concurrent hits on large blobs must not
             # serialize behind each other's digest computation
             if digest(data) == want:
-                with self._lock:
-                    self.hits += 1
+                self._m_hits.inc()
                 return data
+            self._m_validation_failures.inc()
             with self._lock:
                 # bit-rot in the cache: drop (if still ours) and re-fetch
-                self.validation_failures += 1
                 cur = self._blobs.get((key, name))
                 if cur is not None and cur[0] is data:
                     self._drop_entry(key, name)
+        self._m_misses.inc()
         with self._lock:
-            self.misses += 1
             gen = self._fetch_begin(key)
         data = None
         try:

@@ -30,6 +30,8 @@ import uuid
 from typing import Any, Callable, Iterable, NoReturn
 
 from ..core.backends import StorageBackend
+from ..obs import tracing as _tracing
+from ..obs.metrics import MetricsRegistry
 from .protocol import (
     DEFAULT_CHUNK_BYTES,
     MAX_BATCH_OPS,
@@ -77,6 +79,7 @@ class RemoteBackend(StorageBackend):
         max_pool: int = 8,
         stream_threshold: int = 1 << 20,
         chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        registry: MetricsRegistry | None = None,
     ) -> None:
         self.host, self.port = parse_url(url)
         self.client_id = client_id or f"c-{uuid.uuid4().hex[:12]}"
@@ -101,10 +104,54 @@ class RemoteBackend(StorageBackend):
         self._listener_lock = threading.Lock()
         self._event_thread: threading.Thread | None = None
         self._event_sock: socket.socket | None = None
-        self.reconnects = 0  # transport-level redials (observability/tests)
-        self.streamed_writes = 0  # blobs that traveled chunked (tests/bench)
-        self.streamed_reads = 0
-        self.batched_requests = 0  # batch round trips issued
+        # transport counters live on the unified registry, shard-labeled so a
+        # multi-shard client's series stay distinguishable after a merge; the
+        # legacy attribute names below are read-only aliases
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._shard = f"{self.host}:{self.port}"
+        lbl = {"shard": self._shard}
+        self._m_reconnects = self.metrics.counter(
+            "repro_remote_reconnects_total", "transport-level redials", ("shard",)
+        ).labels(**lbl)
+        self._m_streamed_writes = self.metrics.counter(
+            "repro_remote_streamed_writes_total",
+            "blobs written via chunked streaming",
+            ("shard",),
+        ).labels(**lbl)
+        self._m_streamed_reads = self.metrics.counter(
+            "repro_remote_streamed_reads_total",
+            "blobs read via chunked streaming",
+            ("shard",),
+        ).labels(**lbl)
+        self._m_batched = self.metrics.counter(
+            "repro_remote_batched_requests_total",
+            "batch round trips issued",
+            ("shard",),
+        ).labels(**lbl)
+        self._m_rpc_seconds = self.metrics.histogram(
+            "repro_remote_rpc_seconds", "remote RPC round-trip time", ("op", "shard")
+        )
+
+    # -- deprecated counter aliases ---------------------------------------------
+    @property
+    def reconnects(self) -> int:
+        """Deprecated alias of ``repro_remote_reconnects_total{shard}``."""
+        return int(self._m_reconnects.value)
+
+    @property
+    def streamed_writes(self) -> int:
+        """Deprecated alias of ``repro_remote_streamed_writes_total{shard}``."""
+        return int(self._m_streamed_writes.value)
+
+    @property
+    def streamed_reads(self) -> int:
+        """Deprecated alias of ``repro_remote_streamed_reads_total{shard}``."""
+        return int(self._m_streamed_reads.value)
+
+    @property
+    def batched_requests(self) -> int:
+        """Deprecated alias of ``repro_remote_batched_requests_total{shard}``."""
+        return int(self._m_batched.value)
 
     # -- connection management -------------------------------------------------
     def _dial(self) -> socket.socket:
@@ -182,7 +229,7 @@ class RemoteBackend(StorageBackend):
                 sock = self._checkout()
             except OSError as e:  # server down/restarting: back off and redial
                 last = e
-                self.reconnects += 1
+                self._m_reconnects.inc()
                 if attempt < self.retries:  # no pointless sleep before raising
                     time.sleep(self.retry_backoff_s * (2**attempt))
                 continue
@@ -191,7 +238,7 @@ class RemoteBackend(StorageBackend):
             except (ProtocolError, OSError) as e:
                 self._scrap(sock)
                 last = e
-                self.reconnects += 1
+                self._m_reconnects.inc()
                 if attempt < self.retries:  # no pointless sleep before raising
                     time.sleep(self.retry_backoff_s * (2**attempt))
                 continue
@@ -220,7 +267,7 @@ class RemoteBackend(StorageBackend):
                 sock = self._checkout()
             except OSError as e:  # server down/restarting: back off and redial
                 last = e
-                self.reconnects += 1
+                self._m_reconnects.inc()
                 if attempt < self.retries:  # no pointless sleep before raising
                     time.sleep(self.retry_backoff_s * (2**attempt))
                 continue
@@ -232,7 +279,7 @@ class RemoteBackend(StorageBackend):
             except (ProtocolError, OSError) as e:
                 self._scrap(sock)
                 last = e
-                self.reconnects += 1
+                self._m_reconnects.inc()
                 if attempt < self.retries:  # no pointless sleep before raising
                     time.sleep(self.retry_backoff_s * (2**attempt))
                 continue
@@ -258,6 +305,16 @@ class RemoteBackend(StorageBackend):
         err.kind = kind
         raise err
 
+    @staticmethod
+    def _stamp(header: dict[str, Any]) -> dict[str, Any]:
+        """Attach the current traceparent (``tp``) to an outbound request
+        header.  Servers that predate tracing ignore the unknown field; with
+        tracing off this is a no-op, so the wire stays byte-identical."""
+        tp = _tracing.current_traceparent()
+        if tp is not None:
+            header["tp"] = tp
+        return header
+
     def _request(
         self,
         header: dict[str, Any],
@@ -265,7 +322,15 @@ class RemoteBackend(StorageBackend):
         *,
         timeout_s: float | None = None,
     ) -> tuple[dict[str, Any], bytes]:
-        resp, data, sock = self._exchange(header, payload, timeout_s=timeout_s)
+        op = header.get("op", "?")
+        t0 = time.perf_counter()
+        with _tracing.span("rpc", kind="rpc", op=op, shard=self._shard):
+            resp, data, sock = self._exchange(
+                self._stamp(header), payload, timeout_s=timeout_s
+            )
+        self._m_rpc_seconds.labels(op=op, shard=self._shard).observe(
+            time.perf_counter() - t0
+        )
         self._checkin(sock)
         if resp.get("ok"):
             return resp, data
@@ -292,13 +357,15 @@ class RemoteBackend(StorageBackend):
         The ready ack lands *before* any chunk leaves, so a v1 server's
         ``bad_op`` costs one round trip, not one blob; a torn stream replays
         whole on a fresh socket (server-side commit is atomic + idempotent)."""
-        header = {
-            "op": "write_blob_chunked",
-            "key": key,
-            "name": name,
-            "size": len(data),
-            "chunk_bytes": self.chunk_bytes,
-        }
+        header = self._stamp(
+            {
+                "op": "write_blob_chunked",
+                "key": key,
+                "name": name,
+                "size": len(data),
+                "chunk_bytes": self.chunk_bytes,
+            }
+        )
 
         def put(sock: socket.socket) -> dict[str, Any]:
             send_frame(sock, header)
@@ -309,10 +376,17 @@ class RemoteBackend(StorageBackend):
             final, _ = recv_frame(sock)
             return final
 
-        resp = self._with_retries(put)
+        t0 = time.perf_counter()
+        with _tracing.span(
+            "rpc", kind="rpc", op="write_blob_chunked", shard=self._shard
+        ):
+            resp = self._with_retries(put)
+        self._m_rpc_seconds.labels(op="write_blob_chunked", shard=self._shard).observe(
+            time.perf_counter() - t0
+        )
         if not resp.get("ok"):
             self._raise_reply(resp)
-        self.streamed_writes += 1
+        self._m_streamed_writes.inc()
         return int(resp["nbytes"])
 
     def read_blob(self, key: str, name: str) -> bytes:
@@ -337,6 +411,7 @@ class RemoteBackend(StorageBackend):
                 stream_min_bytes=self.stream_threshold,
                 chunk_bytes=self.chunk_bytes,
             )
+        self._stamp(req)
 
         def get(sock: socket.socket) -> tuple[dict[str, Any], str, bytes]:
             send_frame(sock, req)
@@ -348,10 +423,15 @@ class RemoteBackend(StorageBackend):
                 return end, "", b""  # server-reported mid-stream failure
             resp = dict(resp)
             resp["digest"] = end.get("digest")
-            self.streamed_reads += 1
+            self._m_streamed_reads.inc()
             return resp, folded, bytes(buf)
 
-        resp, folded, data = self._with_retries(get)
+        t0 = time.perf_counter()
+        with _tracing.span("rpc", kind="rpc", op="read_blob", shard=self._shard):
+            resp, folded, data = self._with_retries(get)
+        self._m_rpc_seconds.labels(op="read_blob", shard=self._shard).observe(
+            time.perf_counter() - t0
+        )
         if not resp.get("ok"):
             self._raise_reply(resp)
         return resp.get("digest"), folded, data
@@ -405,7 +485,7 @@ class RemoteBackend(StorageBackend):
         if self._server_proto != 1:
             try:
                 resp, _ = self._request({"op": "batch", "ops": ops})
-                self.batched_requests += 1
+                self._m_batched.inc()
                 results = resp["results"]
                 # an oversized read_meta bounces out of the batch: retry it
                 # singularly (rare; keeps the response header bounded)
@@ -432,9 +512,11 @@ class RemoteBackend(StorageBackend):
         return resp
 
     def _pipelined(self, ops: list[dict[str, Any]]) -> list[dict[str, Any]]:
+        tp = _tracing.current_traceparent()
+
         def run(sock: socket.socket) -> list[dict[str, Any]]:
             for sub in ops:
-                send_frame(sock, sub)
+                send_frame(sock, {**sub, "tp": tp} if tp is not None else sub)
             out: list[dict[str, Any]] = []
             for sub in ops:
                 resp, data = recv_frame(sock)
@@ -528,13 +610,15 @@ class RemoteBackend(StorageBackend):
         self, key: str, *, wait: bool = True, timeout_s: float = 300.0
     ) -> LeaseGrant:
         resp, _, sock = self._exchange(
-            {
-                "op": "lease_acquire",
-                "key": key,
-                "client_id": self.client_id,
-                "wait": wait,
-                "timeout": timeout_s,
-            },
+            self._stamp(
+                {
+                    "op": "lease_acquire",
+                    "key": key,
+                    "client_id": self.client_id,
+                    "wait": wait,
+                    "timeout": timeout_s,
+                }
+            ),
             # the socket must outlive the server-side blocking wait
             timeout_s=timeout_s + 30.0,
         )
@@ -583,6 +667,18 @@ class RemoteBackend(StorageBackend):
     def server_stats(self) -> dict[str, Any]:
         resp, _ = self._request({"op": "stats"})
         return dict(resp["stats"])
+
+    def metrics_doc(self) -> "dict[str, Any] | None":
+        """Fetch the server's metrics-registry document (see
+        ``repro.obs.metrics.MetricsRegistry.to_doc``).  ``None`` against a
+        server that predates the ``metrics`` op."""
+        try:
+            resp, _ = self._request({"op": "metrics"})
+        except RemoteStoreError as e:
+            if getattr(e, "kind", "") != "bad_op":
+                raise
+            return None
+        return dict(resp.get("metrics", {}))
 
     def ping(self) -> bool:
         resp, _ = self._request({"op": "ping"})

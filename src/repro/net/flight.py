@@ -35,9 +35,12 @@ don't cross the wire); followers recompute and surface their own.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Protocol, runtime_checkable
 
 from ..core.backends import BackendUnavailable
+from ..obs import tracing as _tracing
+from ..obs.metrics import MetricsRegistry
 from ..sched.singleflight import SingleFlight
 from .client import LeaseGrant
 
@@ -66,17 +69,45 @@ class DistributedSingleFlight(SingleFlight):
         stored_fn: Callable[[str], bool] | None = None,
         lease_timeout_s: float = 300.0,
         max_rounds: int = 3,
+        registry: MetricsRegistry | None = None,
     ) -> None:
-        super().__init__()
+        super().__init__(registry=registry)
         self.remote = remote
         # tells the leader whether its compute actually landed in the store
         # (the admission gate may have rejected it); wired to ``store.has``
         self.stored_fn = stored_fn
         self.lease_timeout_s = lease_timeout_s
         self.max_rounds = max_rounds
-        self.remote_leads = 0  # flights this process led fleet-wide
-        self.remote_waits = 0  # flights coalesced onto another process
-        self.uncoordinated = 0  # flights run without a reachable lease service
+        self._m_remote_leads = self.metrics.counter(
+            "repro_singleflight_remote_leads_total", "flights this process led fleet-wide"
+        )
+        self._m_remote_waits = self.metrics.counter(
+            "repro_singleflight_remote_waits_total",
+            "flights coalesced onto another process's compute",
+        )
+        self._m_uncoordinated = self.metrics.counter(
+            "repro_singleflight_uncoordinated_total",
+            "flights run without a reachable lease service",
+        )
+        self._m_lease_wait_s = self.metrics.histogram(
+            "repro_singleflight_lease_wait_seconds",
+            "time spent blocked on another process's lease",
+        )
+
+    @property
+    def remote_leads(self) -> int:
+        """Deprecated alias of ``repro_singleflight_remote_leads_total``."""
+        return int(self._m_remote_leads.value)
+
+    @property
+    def remote_waits(self) -> int:
+        """Deprecated alias of ``repro_singleflight_remote_waits_total``."""
+        return int(self._m_remote_waits.value)
+
+    @property
+    def uncoordinated(self) -> int:
+        """Deprecated alias of ``repro_singleflight_uncoordinated_total``."""
+        return int(self._m_uncoordinated.value)
 
     def _stored(self, key: str) -> bool:
         if self.stored_fn is None:
@@ -111,18 +142,25 @@ class DistributedSingleFlight(SingleFlight):
                 # recompute — this probe is what keeps election exactly-once
                 # across a mid-run shard death
                 return fn(), False
+            sp = _tracing.span("lease.acquire", kind="lease", key=key)
+            t0 = time.monotonic()
             try:
-                grant = self.remote.lease_acquire(
-                    key, wait=True, timeout_s=self.lease_timeout_s
-                )
+                with sp:
+                    grant = self.remote.lease_acquire(
+                        key, wait=True, timeout_s=self.lease_timeout_s
+                    )
+                    sp.set(granted=grant.granted)
+                    if not grant.granted:
+                        # the blocking acquire above *was* the wait on the
+                        # fleet leader — surface it under its real name
+                        sp.rename("lease.wait")
             except BackendUnavailable:
                 # the whole coordination layer is unreachable: compute
                 # locally rather than wedging the run on it
-                with self._lock:
-                    self.uncoordinated += 1
+                self._m_uncoordinated.inc()
                 return fn(), True
             if grant.granted:
-                self.remote_leads += 1
+                self._m_remote_leads.inc()
                 try:
                     value = fn()
                 except BaseException:
@@ -130,9 +168,9 @@ class DistributedSingleFlight(SingleFlight):
                     raise
                 self._release(key, grant.token, stored=self._stored(key))
                 return value, True
-            with self._lock:
-                self.remote_waits += 1
-                self.waits += 1
+            self._m_remote_waits.inc()
+            self._m_waits.inc()
+            self._m_lease_wait_s.observe(time.monotonic() - t0)
             if grant.stored:
                 # the fleet leader stored it: fn's store probe loads it now
                 return fn(), False

@@ -16,10 +16,13 @@ replication, and failover are entirely client-side (see ``docs/remote.md``,
 from __future__ import annotations
 
 import argparse
+import os
 import signal
 import sys
 
 from ..core.backends import LocalFSBackend, MemoryBackend, TieredBackend
+from ..obs.logging import configure_logging, get_logger
+from ..obs.tracing import configure_tracing
 from .protocol import DEFAULT_PORT
 from .server import StoreServer
 
@@ -43,16 +46,46 @@ def main(argv: list[str] | None = None) -> int:
         default=0,
         help="optional in-memory hot tier (MiB); 0 disables tiering",
     )
+    parser.add_argument(
+        "--log-level",
+        default="info",
+        choices=["debug", "info", "warning", "error", "critical"],
+        help="logging verbosity for the repro logger tree",
+    )
+    parser.add_argument(
+        "--log-json",
+        action="store_true",
+        help="emit JSON-lines logs instead of the human-readable format",
+    )
+    parser.add_argument(
+        "--trace-dir",
+        default=None,
+        help="record spans as NDJSON under this directory (enables tracing; "
+        "also reachable via REPRO_TRACE_DIR)",
+    )
+    parser.add_argument(
+        "--service",
+        default=os.environ.get("REPRO_SERVICE", "store"),
+        help="service name stamped on this process's spans "
+        "(default: $REPRO_SERVICE or 'store')",
+    )
     args = parser.parse_args(argv)
+
+    configure_logging(args.log_level, json_lines=args.log_json)
+    log = get_logger("net.serve")
+    if args.trace_dir:
+        configure_tracing(args.trace_dir, args.service)
 
     backend = LocalFSBackend(args.root)
     if args.hot_mb > 0:
         backend = TieredBackend(
             backend, MemoryBackend(), hot_capacity_bytes=args.hot_mb << 20
         )
-    server = StoreServer(backend, host=args.host, port=args.port)
+    server = StoreServer(
+        backend, host=args.host, port=args.port, trace_service=args.service
+    )
     server.start()
-    print(f"store server listening on {server.url} (root={args.root})", flush=True)
+    log.info("store server listening on %s (root=%s)", server.url, args.root)
 
     signal.signal(signal.SIGTERM, lambda *_: server.stop())
     signal.signal(signal.SIGINT, lambda *_: server.stop())

@@ -41,6 +41,8 @@ from typing import Any
 from ..catalog.index import CatalogIndex
 from ..catalog.records import CatalogQuery, CatalogRecord
 from ..core.backends import StorageBackend
+from ..obs import tracing as _tracing
+from ..obs.metrics import MetricsRegistry
 from .protocol import (
     DEFAULT_CHUNK_BYTES,
     MAX_BATCH_OPS,
@@ -104,10 +106,16 @@ class StoreServer:
         backend: StorageBackend,
         host: str = "127.0.0.1",
         port: int = 0,
+        registry: MetricsRegistry | None = None,
+        trace_service: str | None = None,
     ) -> None:
         self.backend = backend
         self.host = host
         self.port = port
+        # service name stamped on this server's spans — in-process test
+        # clusters give each shard its own so stitched traces can tell the
+        # shards apart even under one pid
+        self.trace_service = trace_service
         self._listener: socket.socket | None = None
         self._accept_thread: threading.Thread | None = None
         self._stopping = threading.Event()
@@ -116,9 +124,49 @@ class StoreServer:
         self._lease_lock = threading.Lock()
         self._leases: dict[str, _Lease] = {}
         self._token_counter = itertools.count(1)
-        self._counts_lock = threading.Lock()
-        self._counts: dict[str, int] = {}
-        self._stream_counts: dict[str, int] = {}
+        # per-op and streaming counters live on the unified metrics registry;
+        # ``stats()`` reconstructs its legacy dict shape from the same series
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._m_requests = self.metrics.counter(
+            "repro_store_server_requests_total", "requests dispatched, per op", ("op",)
+        )
+        self._m_stream_chunks = self.metrics.counter(
+            "repro_store_server_stream_chunks_total",
+            "chunk frames moved by streaming transfers",
+            ("dir",),
+        )
+        self._m_stream_bytes = self.metrics.counter(
+            "repro_store_server_stream_bytes_total",
+            "payload bytes moved by streaming transfers",
+            ("dir",),
+        )
+        self._m_stream_events = self.metrics.counter(
+            "repro_store_server_stream_events_total",
+            "streaming milestones (streamed_writes, sendfile_reads, spill_aborts, ...)",
+            ("event",),
+        )
+        # pre-bound children: the per-chunk path must not pay a label lookup
+        self._m_chunks_in = self._m_stream_chunks.labels(dir="in")
+        self._m_chunks_out = self._m_stream_chunks.labels(dir="out")
+        self._m_bytes_in = self._m_stream_bytes.labels(dir="in")
+        self._m_bytes_out = self._m_stream_bytes.labels(dir="out")
+        self.metrics.gauge(
+            "repro_store_server_connections", "live client connections"
+        ).unlabeled.set_function(lambda: len(self._conns))
+        self.metrics.gauge(
+            "repro_store_server_active_leases", "keys currently leased"
+        ).unlabeled.set_function(lambda: len(self._leases))
+        self.metrics.gauge(
+            "repro_store_server_subscribers", "connections subscribed to events"
+        ).unlabeled.set_function(
+            lambda: sum(1 for c in list(self._conns) if c.subscriber)
+        )
+        self.metrics.gauge(
+            "repro_store_server_catalog_records", "records in the catalog slice"
+        ).unlabeled.set_function(lambda: len(self.catalog))
+        self.metrics.gauge(
+            "repro_store_server_uptime_seconds", "seconds since start()"
+        ).unlabeled.set_function(lambda: time.monotonic() - self._started_at)
         # digest sidecar: content digests recorded at verified writes, so a
         # chunked read can skip the server-side SHA-256 pass (the client's
         # incremental fold is the end-to-end check) and go through
@@ -265,23 +313,31 @@ class StoreServer:
             self._drop_conn(conn)
 
     # -- request dispatch -----------------------------------------------------
-    def _count(self, op: str) -> None:
-        with self._counts_lock:
-            self._counts[op] = self._counts.get(op, 0) + 1
-
     def _count_stream(self, what: str, n: int = 1) -> None:
-        with self._counts_lock:
-            self._stream_counts[what] = self._stream_counts.get(what, 0) + n
+        self._m_stream_events.labels(event=what).inc(n)
 
     def _dispatch(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
         op = req.get("op", "")
-        self._count(op)
+        self._m_requests.labels(op=op).inc()
+        # adopt the caller's trace context when the request carries one (the
+        # optional ``tp`` field — absent from old clients, ignored by old
+        # servers) so the server-side span stitches under the caller's trace
+        ctx = _tracing.TraceContext.from_traceparent(req.get("tp"))
+        sp = (
+            _tracing.span(f"store.{op}", kind="server", parent=ctx,
+                          svc=self.trace_service)
+            if ctx is not None
+            else _tracing.NOOP_SPAN
+        )
         try:
-            handler = getattr(self, f"_op_{op}", None)
-            if handler is None:
-                conn.send({"ok": False, "error": f"unknown op {op!r}", "kind": "bad_op"})
-                return
-            handler(conn, req, payload)
+            with sp:
+                handler = getattr(self, f"_op_{op}", None)
+                if handler is None:
+                    conn.send(
+                        {"ok": False, "error": f"unknown op {op!r}", "kind": "bad_op"}
+                    )
+                    return
+                handler(conn, req, payload)
         except (KeyError, FileNotFoundError) as e:
             conn.send({"ok": False, "error": str(e), "kind": "not_found"})
         except (BrokenPipeError, ConnectionResetError):
@@ -405,7 +461,8 @@ class StoreServer:
                                 conn.sock.fileno(), fd, offset + sent, n - sent
                             )
                         offset += n
-                        self._count_stream("chunks_out")
+                        self._m_chunks_out.inc()
+                        self._m_bytes_out.inc(n)
                     send_stream_end(conn.sock, digest_hex=known)
                     self._count_stream("sendfile_reads")
                 else:
@@ -424,7 +481,8 @@ class StoreServer:
                         sha.update(view[:n])
                         send_frame(conn.sock, b'{"c":1}', view[:n])
                         sent += n
-                        self._count_stream("chunks_out")
+                        self._m_chunks_out.inc()
+                        self._m_bytes_out.inc(n)
                     hexd = sha.hexdigest()
                     self._record_digest(key, name, hexd)
                     send_stream_end(conn.sock, digest_hex=hexd)
@@ -482,7 +540,8 @@ class StoreServer:
                     sha.update(view[:n])
                     writer.write(view[:n])
                     got += n
-                    self._count_stream("chunks_in")
+                    self._m_chunks_in.inc()
+                    self._m_bytes_in.inc(n)
             if header.get("abort"):
                 conn.send(
                     {
@@ -562,7 +621,7 @@ class StoreServer:
             {
                 "ok": True,
                 "proto": PROTO_VERSION,
-                "features": ["chunked", "batch", "catalog"],
+                "features": ["chunked", "batch", "catalog", "metrics"],
             }
         )
 
@@ -776,9 +835,21 @@ class StoreServer:
 
     # -- introspection ---------------------------------------------------------
     def stats(self) -> dict[str, Any]:
-        with self._counts_lock:
-            counts = dict(self._counts)
-            streaming = dict(self._stream_counts)
+        """Legacy dict-shaped snapshot, now a **deprecated alias** view
+        reconstructed from the unified metrics registry (the canonical
+        surface is the ``metrics`` op / ``repro_store_server_*`` series —
+        see ``repro/obs/naming.py`` for the pinned key mapping)."""
+        counts = {
+            s["labels"]["op"]: int(s["value"] or 0)
+            for s in self._m_requests.series()
+        }
+        streaming: dict[str, int] = {}
+        for s in self._m_stream_chunks.series():
+            streaming[f"chunks_{s['labels']['dir']}"] = int(s["value"] or 0)
+        for s in self._m_stream_bytes.series():
+            streaming[f"bytes_{s['labels']['dir']}"] = int(s["value"] or 0)
+        for s in self._m_stream_events.series():
+            streaming[s["labels"]["event"]] = int(s["value"] or 0)
         with self._lease_lock:
             n_leases = len(self._leases)
         with self._conns_lock:
@@ -798,6 +869,11 @@ class StoreServer:
 
     def _op_stats(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
         conn.send({"ok": True, "stats": self.stats()})
+
+    def _op_metrics(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
+        """Canonical introspection surface: the full registry doc, mergeable
+        across shards (``ShardedBackend.metrics_doc`` fans this out)."""
+        conn.send({"ok": True, "metrics": self.metrics.to_doc()})
 
     def _op_ping(self, conn: _Conn, req: dict[str, Any], payload: bytes) -> None:
         conn.send({"ok": True, "pong": True})

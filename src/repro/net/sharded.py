@@ -51,6 +51,7 @@ import time
 from typing import Any, Callable, Sequence
 
 from ..core.backends import BackendUnavailable, StorageBackend
+from ..obs.metrics import MetricsRegistry, merge_docs
 from .client import LeaseGrant, RemoteBackend
 from .protocol import MAX_BATCH_OPS, IntegrityError, StoreUnreachable, parse_urls
 from .ring import HashRing
@@ -89,6 +90,7 @@ class ShardedBackend(StorageBackend):
         client_id: str | None = None,
         down_cooldown_s: float = 1.0,
         vnodes: int = 64,
+        registry: MetricsRegistry | None = None,
         **backend_kw: Any,
     ) -> None:
         if isinstance(urls, str):
@@ -105,8 +107,14 @@ class ShardedBackend(StorageBackend):
         self.ring = HashRing(self.nodes, vnodes=vnodes)
         self.replication = min(replication, len(self.nodes))
         self.down_cooldown_s = down_cooldown_s
+        # one registry across the per-shard clients: their series carry a
+        # ``shard`` label, so sharing never collides
+        self.metrics = registry if registry is not None else MetricsRegistry()
         self._shards: dict[str, RemoteBackend] = {
-            node: RemoteBackend(f"tcp://{node}", client_id=client_id, **backend_kw)
+            node: RemoteBackend(
+                f"tcp://{node}", client_id=client_id, registry=self.metrics,
+                **backend_kw,
+            )
             for node in self.nodes
         }
         self.client_id = next(iter(self._shards.values())).client_id
@@ -115,10 +123,20 @@ class ShardedBackend(StorageBackend):
         self._lock = threading.Lock()
         self._down_until: dict[str, float] = {}  # node -> monotonic retry time
         self._lease_routes: dict[tuple[str, str], str] = {}  # (key, token) -> node
-        # observability (tests + benchmarks assert on these)
-        self.failover_reads = 0  # reads served by a non-first live replica
-        self.read_repairs = 0  # blobs healed back onto a lagging replica
-        self.lease_failovers = 0  # lease ops that left the key's primary
+        # cluster-health counters on the registry; the attribute names the
+        # tests and benchmarks assert on survive below as read-only aliases
+        self._m_failover_reads = self.metrics.counter(
+            "repro_cluster_failover_reads_total",
+            "reads served by a non-first live replica",
+        )
+        self._m_read_repairs = self.metrics.counter(
+            "repro_cluster_read_repairs_total",
+            "blobs healed back onto a lagging replica",
+        )
+        self._m_lease_failovers = self.metrics.counter(
+            "repro_cluster_lease_failovers_total",
+            "lease ops that left the key's primary",
+        )
 
     # -- shard health ----------------------------------------------------------
     def _is_down(self, node: str) -> bool:
@@ -207,8 +225,7 @@ class ShardedBackend(StorageBackend):
             if node != targets[0]:
                 # served by a non-primary replica — whether we fell through
                 # this very op or the primary was already marked down
-                with self._lock:
-                    self.failover_reads += 1
+                self._m_failover_reads.inc()
             self._repair(key, name, data, missing + corrupt)
             return data
         if corrupt and unreachable == 0:
@@ -232,8 +249,7 @@ class ShardedBackend(StorageBackend):
             except BackendUnavailable:
                 self._mark_down(node)
             else:
-                with self._lock:
-                    self.read_repairs += 1
+                self._m_read_repairs.inc()
 
     def delete(self, key: str) -> None:
         """Delete on every replica — deliberately including shards inside
@@ -483,8 +499,7 @@ class ShardedBackend(StorageBackend):
                 continue
             self._mark_up(node)
             if node != self.ring.primary(key):
-                with self._lock:
-                    self.lease_failovers += 1
+                self._m_lease_failovers.inc()
             if grant.granted:
                 with self._lock:
                     self._lease_routes[(key, grant.token)] = node
@@ -530,6 +545,27 @@ class ShardedBackend(StorageBackend):
                 ops[op] = ops.get(op, 0) + n
         return {"requests": total, "ops": ops, "shards": shards}
 
+    def metrics_doc(self) -> dict[str, Any]:
+        """Cluster-wide metrics merge: fan the ``metrics`` op out to every
+        shard and fold the docs element-wise (fixed histogram buckets make
+        that exact), stamping each shard's series with ``shard=host:port`` so
+        non-additive gauges (uptime, connections) never sum across shards.
+        Dead or pre-metrics shards simply contribute nothing."""
+        docs: list[dict[str, Any] | None] = []
+        extras: list[dict[str, str] | None] = []
+        for node, rb in self._shards.items():
+            try:
+                doc = rb.metrics_doc()
+            except BackendUnavailable:
+                self._mark_down(node)
+                continue
+            self._mark_up(node)
+            if doc is None:
+                continue
+            docs.append(doc)
+            extras.append({"shard": node})
+        return merge_docs(docs, extras)
+
     def ping_all(self) -> dict[str, bool]:
         out: dict[str, bool] = {}
         for node, rb in self._shards.items():
@@ -546,6 +582,21 @@ class ShardedBackend(StorageBackend):
     @property
     def reconnects(self) -> int:
         return sum(rb.reconnects for rb in self._shards.values())
+
+    @property
+    def failover_reads(self) -> int:
+        """Deprecated alias of ``repro_cluster_failover_reads_total``."""
+        return int(self._m_failover_reads.value)
+
+    @property
+    def read_repairs(self) -> int:
+        """Deprecated alias of ``repro_cluster_read_repairs_total``."""
+        return int(self._m_read_repairs.value)
+
+    @property
+    def lease_failovers(self) -> int:
+        """Deprecated alias of ``repro_cluster_lease_failovers_total``."""
+        return int(self._m_lease_failovers.value)
 
     def shard_for(self, key: str) -> str:
         """The key's current ring primary (benchmarks pick kill victims)."""

@@ -1,0 +1,23 @@
+"""repro.obs — unified observability for the workflow fabric.
+
+One metrics home (:mod:`repro.obs.metrics`), cross-process run tracing
+(:mod:`repro.obs.tracing`), structured logging (:mod:`repro.obs.logging`),
+and a trace-tree CLI (``python -m repro.obs.trace``).  Everything is
+stdlib-only so every layer of the fabric can depend on it without cycles.
+"""
+from __future__ import annotations
+
+from .metrics import MetricsRegistry, lint_registry, merge_docs, render_prometheus
+from .tracing import TraceContext, bind, configure_tracing, current_traceparent, span
+
+__all__ = [
+    "MetricsRegistry",
+    "TraceContext",
+    "bind",
+    "configure_tracing",
+    "current_traceparent",
+    "lint_registry",
+    "merge_docs",
+    "render_prometheus",
+    "span",
+]

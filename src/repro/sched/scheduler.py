@@ -31,6 +31,7 @@ import jax
 
 from ..core.backends import BackendUnavailable
 from ..core.cost import CostModel
+from ..obs import tracing as _tracing
 from ..core.executor import _nbytes, admit_and_store
 from ..core.provenance import ProvenanceLog, RunRecord
 from ..core.registry import ModuleRegistry
@@ -100,6 +101,9 @@ class _RunCtx:
         self.store_s = 0.0
         self.stored_keys: list[str] = []
         self.sf_waits = 0
+        # the run span, re-activated on every pool worker thread so node
+        # spans (and the store/RPC spans beneath them) stitch to this run
+        self.trace_parent: Any = None
 
 
 @dataclass
@@ -179,6 +183,18 @@ class DagScheduler:
         if isinstance(dag, Workflow):
             dag = DagWorkflow.from_workflow(dag, registry=self.registry)
         dag.validate()
+        with _tracing.span(
+            "sched.run", kind="run", workflow=dag.workflow_id or dag.dataset_id
+        ) as run_sp:
+            result = self._run_traced(dag, data, run_sp)
+            run_sp.set(
+                n_skipped=result.n_skipped,
+                stored=len(result.stored_keys),
+                sf_waits=result.singleflight_waits,
+            )
+        return result
+
+    def _run_traced(self, dag: DagWorkflow, data: Any, run_sp: Any) -> DagRunResult:
         t_start = time.perf_counter()
         order = dag.topo_order()
         with_state = self.policy.with_state
@@ -203,10 +219,12 @@ class DagScheduler:
         # every presence question this plan needs — each node's chain-prefix
         # loadability plus the non-chain bookkeeping probes — in ONE batched
         # round trip to the pool instead of one per node
-        states = self.store.has_state_many(
-            [p.key(with_state) for p in chain_prefix.values() if p is not None]
-            + non_chain
-        )
+        probe_keys = [
+            p.key(with_state) for p in chain_prefix.values() if p is not None
+        ] + non_chain
+        with _tracing.span("probe.plan", kind="probe", depth=len(probe_keys)) as psp:
+            states = self.store.has_state_many(probe_keys)
+            psp.set(present=sum(1 for s in states.values() if s == "present"))
         for key in non_chain:
             if states.get(key) == "absent":
                 # authoritative absence only: an unreachable artifact keeps
@@ -227,6 +245,7 @@ class DagScheduler:
 
         # 2) dispatch ready planned nodes onto the pool
         ctx = _RunCtx(dag, data)
+        ctx.trace_parent = run_sp if isinstance(run_sp, _tracing.Span) else None
         planned = [n for n in order if n in needed]
         remaining = {
             n: (0 if loadable[n] else len(dag.parents_of(n))) for n in planned
@@ -347,16 +366,27 @@ class DagScheduler:
         prefix = ctx.dag.chain_prefix(node_id)
         key = prefix.key(self.policy.with_state) if prefix is not None else None
         t0 = time.perf_counter()
-        if key is not None:
-            (source, value), leader = self.singleflight.run(
-                key, lambda: self._produce(ctx, node_id, prefix, key)
-            )
-            if not leader:
-                source = "singleflight"
-                with ctx.lock:
-                    ctx.sf_waits += 1
-        else:
-            source, value = self._produce(ctx, node_id, None, None)
+        # pool threads carry no context — stitch node spans to the run span
+        # explicitly; recursive materialization inherits the caller's span
+        par = _tracing.current_span() or ctx.trace_parent
+        with _tracing.span(
+            "node",
+            kind="node",
+            parent=par,
+            node=node_id,
+            module=ctx.dag.ref(node_id).module_id,
+        ) as nsp:
+            if key is not None:
+                (source, value), leader = self.singleflight.run(
+                    key, lambda: self._produce(ctx, node_id, prefix, key)
+                )
+                if not leader:
+                    source = "singleflight"
+                    with ctx.lock:
+                        ctx.sf_waits += 1
+            else:
+                source, value = self._produce(ctx, node_id, None, None)
+            nsp.set(source=source)
         dt = time.perf_counter() - t0
         with ctx.lock:
             ctx.values[node_id] = value

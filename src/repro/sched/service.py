@@ -27,6 +27,8 @@ from ..core.registry import ModuleRegistry
 from ..core.risp import StoragePolicy
 from ..core.store import IntermediateStore
 from ..core.workflow import ModuleSpec, Workflow
+from ..obs import tracing as _tracing
+from ..obs.metrics import MetricsRegistry
 from .dag import DagWorkflow
 from .dispatch import NodeDispatcher
 from .scheduler import DagRunResult, DagScheduler
@@ -77,9 +79,13 @@ class WorkflowService:
         dispatcher: "NodeDispatcher | None" = None,
         max_pending: int | None = None,
         catalog: Any = None,
+        metrics: MetricsRegistry | None = None,
     ) -> None:
         if max_pending is not None and max_pending < 1:
             raise ValueError("max_pending must be >= 1 (or None for unbounded)")
+        # one metrics home for the whole fabric: default to the store's
+        # registry so service-, flight-, and store-level series co-reside
+        self.metrics = metrics if metrics is not None else store.metrics
         self.scheduler = DagScheduler(
             store=store,
             policy=policy,
@@ -88,10 +94,37 @@ class WorkflowService:
             admission=admission,
             provenance=provenance,
             cost_model=cost_model,
-            singleflight=singleflight if singleflight is not None else SingleFlight(),
+            singleflight=(
+                singleflight
+                if singleflight is not None
+                else SingleFlight(registry=self.metrics)
+            ),
             dispatcher=dispatcher,
             catalog=catalog,
         )
+        m = self.metrics
+        self._m_runs = m.counter(
+            "repro_runs_total", "workflow runs finished", ("status",)
+        )
+        self._m_run_seconds = m.histogram(
+            "repro_run_seconds", "end-to-end workflow run wall time"
+        )
+        self._m_units = m.counter(
+            "repro_run_units_total", "workflow nodes in finished runs"
+        )
+        self._m_units_skipped = m.counter(
+            "repro_run_units_skipped_total", "nodes skipped via stored-prefix reuse"
+        )
+        self._m_stored = m.counter(
+            "repro_run_stored_total", "artifacts stored by finished runs"
+        )
+        self._m_rejected = m.counter(
+            "repro_service_rejected_total",
+            "submissions refused by the max_pending admission bound",
+        )
+        m.gauge(
+            "repro_service_pending_runs", "runs submitted but not yet finished"
+        ).unlabeled.set_function(lambda: self._pending)
         self._lock = threading.Lock()
         self._t_first: float | None = None
         self._t_last: float = 0.0
@@ -104,7 +137,6 @@ class WorkflowService:
         self._inflight: list[Future] = []  # coordinator-pool futures
         self.max_pending = max_pending
         self._pending = 0  # submitted, not yet finished (under self._lock)
-        self._rejected = 0  # AdmissionRejected count (under self._lock)
         self._draining = False
         self._closed = False
 
@@ -143,15 +175,16 @@ class WorkflowService:
 
     @property
     def rejected_runs(self) -> int:
-        """Submissions refused by the ``max_pending`` admission bound."""
-        with self._lock:
-            return self._rejected
+        """Submissions refused by the ``max_pending`` admission bound
+        (deprecated alias of ``repro_service_rejected_total``)."""
+        return int(self._m_rejected.value)
 
     def submit(
         self,
         dag: DagWorkflow | Workflow,
         data: Any,
         on_state: "Callable[[str], None] | None" = None,
+        trace: "_tracing.TraceContext | None" = None,
     ) -> "Future[DagRunResult]":
         """Non-blocking: schedule one workflow run, return its future.
 
@@ -161,13 +194,21 @@ class WorkflowService:
         run up, then ``"finished"`` or ``"failed"`` (before the future
         resolves); exceptions it raises are swallowed — observability must
         not kill the run.
+
+        ``trace`` is the run's :class:`~repro.obs.tracing.TraceContext`
+        (gateway-propagated or caller-minted); when tracing is enabled and
+        none is given, a fresh one is minted so every run is traceable.  The
+        returned future carries it as ``fut.trace_id``.
         """
+        if trace is None and _tracing.tracing_enabled():
+            trace = _tracing.TraceContext.new()
         fut: Future[DagRunResult] = Future()
+        fut.trace_id = trace.trace_id if trace is not None else None  # type: ignore[attr-defined]
         with self._lock:
             if self._draining or self._closed:
                 raise ServiceClosed("service is shutting down; not accepting runs")
             if self.max_pending is not None and self._pending >= self.max_pending:
-                self._rejected += 1
+                self._m_rejected.inc()
                 raise AdmissionRejected(self._pending, self.max_pending)
             self._pending += 1
             if self._t_first is None:
@@ -181,11 +222,21 @@ class WorkflowService:
             except Exception:  # noqa: BLE001 - observer errors never kill runs
                 pass
 
+        wf_name = getattr(dag, "workflow_id", "") or getattr(dag, "dataset_id", "")
+
         def _coordinate() -> None:
             _notify("started")
+            rsp = _tracing.span("run", kind="run", parent=trace, workflow=wf_name)
+            t0 = time.perf_counter()
             try:
-                result = self.scheduler.run(dag, data)
+                with rsp:
+                    result = self.scheduler.run(dag, data)
+                    rsp.set(
+                        n_skipped=result.n_skipped, stored=len(result.stored_keys)
+                    )
             except BaseException as e:  # noqa: BLE001 - delivered via future
+                self._m_runs.labels(status="failed").inc()
+                self._m_run_seconds.observe(time.perf_counter() - t0)
                 with self._lock:
                     self._agg.failures += 1
                     self._t_last = time.perf_counter()
@@ -193,6 +244,11 @@ class WorkflowService:
                 _notify("failed")
                 fut.set_exception(e)
             else:
+                self._m_runs.labels(status="ok").inc()
+                self._m_run_seconds.observe(time.perf_counter() - t0)
+                self._m_units.inc(len(result.module_seconds))
+                self._m_units_skipped.inc(result.n_skipped)
+                self._m_stored.inc(len(result.stored_keys))
                 with self._lock:
                     self._agg.add_run(result)
                     self._t_last = time.perf_counter()

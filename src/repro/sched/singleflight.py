@@ -18,6 +18,8 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable
 
+from ..obs.metrics import MetricsRegistry
+
 
 class _Flight:
     __slots__ = ("_event", "_value", "_exc")
@@ -46,11 +48,31 @@ class _Flight:
 class SingleFlight:
     """Per-key compute deduplication across concurrent runs."""
 
-    def __init__(self) -> None:
+    def __init__(self, registry: MetricsRegistry | None = None) -> None:
         self._lock = threading.Lock()
         self._flights: dict[str, _Flight] = {}
-        self.leads = 0  # times a caller computed
-        self.waits = 0  # times a caller coalesced onto another's compute
+        # counters live in the shared metrics registry; ``leads``/``waits``
+        # remain as read-only properties for existing callers
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._m_leads = self.metrics.counter(
+            "repro_singleflight_leads_total", "flights this process computed"
+        )
+        self._m_waits = self.metrics.counter(
+            "repro_singleflight_waits_total",
+            "flights coalesced onto another caller's compute",
+        )
+
+    @property
+    def leads(self) -> int:
+        """Times a caller computed (deprecated alias of
+        ``repro_singleflight_leads_total``)."""
+        return int(self._m_leads.value)
+
+    @property
+    def waits(self) -> int:
+        """Times a caller coalesced onto another's compute (deprecated alias
+        of ``repro_singleflight_waits_total``)."""
+        return int(self._m_waits.value)
 
     def run(
         self,
@@ -65,10 +87,10 @@ class SingleFlight:
             if flight is None:
                 flight = _Flight()
                 self._flights[key] = flight
-                self.leads += 1
+                self._m_leads.inc()
                 leader = True
             else:
-                self.waits += 1
+                self._m_waits.inc()
                 leader = False
         if not leader:
             return flight.wait(timeout), False

@@ -1,7 +1,15 @@
 """Aggregate throughput/reuse stats shared by the scheduler service and the
 serving engine (both are front doors that replay many units of work against
 one RISP-governed cache), plus the per-tenant ledger the gateway bills
-quota against."""
+quota against.
+
+These dict-shaped snapshots are now *deprecated aliases* over the unified
+:mod:`repro.obs.metrics` registry: ``runs``/``failures`` ↔
+``repro_runs_total{status}``, ``units_total``/``units_skipped`` ↔
+``repro_run_units[_skipped]_total``, ``stored`` ↔ ``repro_run_stored_total``,
+``singleflight_waits`` ↔ ``repro_singleflight_waits_total``, and the
+per-tenant counters ↔ ``repro_tenant_*{tenant}``.  See
+``repro/obs/naming.py`` for the pinned mapping."""
 from __future__ import annotations
 
 import threading
@@ -125,6 +133,38 @@ class TenantLedger:
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     _tenants: dict[str, TenantCounters] = field(default_factory=dict)
     _key_owner: dict[str, tuple[str, int]] = field(default_factory=dict)
+    _metrics: "object | None" = field(default=None, repr=False)
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror the ledger onto a :class:`repro.obs.metrics.MetricsRegistry`
+        as tenant-labeled series (the gateway calls this with its registry).
+        The dict snapshot stays the deprecated alias surface; the registry
+        series are the canonical names (see ``repro/obs/naming.py``).  Note
+        ``repro_tenant_runs_total`` counts *started* reservations — a
+        cancelled reservation is subtracted from the alias dict but, being a
+        monotone counter, not from the canonical series."""
+        self._metrics = registry
+        self._m_runs = registry.counter(
+            "repro_tenant_runs_total", "run reservations started", ("tenant",)
+        )
+        self._m_failures = registry.counter(
+            "repro_tenant_failures_total", "runs that failed", ("tenant",)
+        )
+        self._m_rejected = registry.counter(
+            "repro_tenant_rejected_total", "submissions rejected (429)", ("tenant",)
+        )
+        self._g_inflight = registry.gauge(
+            "repro_tenant_inflight", "runs currently in flight", ("tenant",)
+        )
+        self._g_bytes = registry.gauge(
+            "repro_tenant_stored_bytes", "live stored bytes billed", ("tenant",)
+        )
+
+    def _sync_gauges(self, tenant: str, c: TenantCounters) -> None:
+        if self._metrics is None:
+            return
+        self._g_inflight.labels(tenant=tenant).set(c.runs_in_flight)
+        self._g_bytes.labels(tenant=tenant).set(c.bytes_stored)
 
     def _get(self, tenant: str) -> TenantCounters:
         c = self._tenants.get(tenant)
@@ -137,6 +177,9 @@ class TenantLedger:
             c = self._get(tenant)
             c.runs_in_flight += 1
             c.runs_total += 1
+            if self._metrics is not None:
+                self._m_runs.labels(tenant=tenant).inc()
+            self._sync_gauges(tenant, c)
 
     def run_finished(
         self,
@@ -153,6 +196,9 @@ class TenantLedger:
             c.units_skipped += units_skipped
             if failed:
                 c.failures += 1
+                if self._metrics is not None:
+                    self._m_failures.labels(tenant=tenant).inc()
+            self._sync_gauges(tenant, c)
 
     def run_cancelled(self, tenant: str) -> None:
         """Release a reservation that never ran (a later admission layer
@@ -161,10 +207,13 @@ class TenantLedger:
             c = self._get(tenant)
             c.runs_in_flight = max(0, c.runs_in_flight - 1)
             c.runs_total = max(0, c.runs_total - 1)
+            self._sync_gauges(tenant, c)
 
     def rejected(self, tenant: str) -> None:
         with self._lock:
             self._get(tenant).rejected += 1
+            if self._metrics is not None:
+                self._m_rejected.labels(tenant=tenant).inc()
 
     def charge_stored(self, tenant: str, key: str, nbytes: int) -> None:
         """Bill ``nbytes`` of ``key`` to ``tenant``.  Re-storing a key that
@@ -180,6 +229,9 @@ class TenantLedger:
             c.bytes_stored += nbytes
             c.keys_stored += 1
             self._key_owner[key] = (tenant, nbytes)
+            if prev is not None:
+                self._sync_gauges(prev[0], self._get(prev[0]))
+            self._sync_gauges(tenant, c)
 
     def credit_evicted(self, key: str) -> None:
         """The store reclaimed ``key``: release its bytes from whichever
@@ -192,6 +244,7 @@ class TenantLedger:
             c = self._get(owner[0])
             c.bytes_stored = max(0, c.bytes_stored - owner[1])
             c.keys_stored = max(0, c.keys_stored - 1)
+            self._sync_gauges(owner[0], c)
 
     def in_flight(self, tenant: str) -> int:
         with self._lock:

@@ -1,0 +1,243 @@
+"""End-to-end observability: one trace across gateway → scheduler → shards,
+and one cluster-merged ``GET /metrics`` exposition.
+
+The acceptance scenario of the observability PR: an HTTP-submitted run
+against a live 3-shard cluster produces a single stitched trace (spans from
+at least three distinct (service, pid) processes, server-side store spans on
+at least two shards), a second warm submission turns the reuse counters and
+the seconds-saved-by-reuse rollup non-zero, and the gateway's ``/metrics``
+shows all of it merged across every process.
+"""
+from __future__ import annotations
+
+import json
+import re
+import socket
+import threading
+import time
+import urllib.request
+
+import pytest
+
+from repro.api import Client, WorkflowSpec
+from repro.core import MemoryBackend
+from repro.gateway import GatewayServer, TokenAuthenticator
+from repro.gateway.serve import register_demo_modules
+from repro.net import RemoteBackend, ShardedBackend, StoreServer
+from repro.net.protocol import recv_frame, send_frame
+from repro.obs.trace import build_trace, critical_path, render_trace, reuse_rollup
+from repro.obs.tracing import TraceContext, configure_tracing, iter_spans
+
+TOKEN = "tok-alice"
+SLOW_S = 0.4
+
+
+def _register_slow(registry):
+    @registry.module("slow", seconds=SLOW_S)
+    def slow(xs, seconds=SLOW_S):
+        time.sleep(seconds)
+        return [x * 2 for x in xs]
+
+
+def _http(base, method, path, body=None, headers=None, timeout=60):
+    req = urllib.request.Request(base + path, method=method)
+    req.add_header("Authorization", f"Bearer {TOKEN}")
+    for k, v in (headers or {}).items():
+        req.add_header(k, v)
+    data = json.dumps(body).encode() if body is not None else None
+    with urllib.request.urlopen(req, data=data, timeout=timeout) as resp:
+        raw = resp.read()
+        ctype = resp.headers.get("Content-Type", "")
+        return resp.status, (
+            json.loads(raw) if "json" in ctype else raw.decode()
+        )
+
+
+@pytest.fixture()
+def fabric(tmp_path):
+    trace_dir = str(tmp_path / "traces")
+    configure_tracing(trace_dir, "gw")
+    servers = [
+        StoreServer(MemoryBackend(), trace_service=f"shard{i}").start()
+        for i in range(3)
+    ]
+    urls = ",".join(f"127.0.0.1:{s.port}" for s in servers)
+    client = Client(store_url=urls, replication=2, max_pending=16)
+    register_demo_modules(client.registry)
+    _register_slow(client.registry)
+    gw = GatewayServer(client, TokenAuthenticator({TOKEN: "alice"}))
+    gw.start()
+    try:
+        yield gw, client, servers, urls, trace_dir
+    finally:
+        gw.close()
+        client.close()
+        for s in servers:
+            s.stop()
+        configure_tracing(None)
+
+
+def test_gateway_run_produces_stitched_trace_and_cluster_metrics(fabric):
+    gw, client, servers, urls, trace_dir = fabric
+    spec = WorkflowSpec.from_steps(
+        "nums", [("slow", {"seconds": SLOW_S}), "scale"]
+    ).to_dict()
+    ctx = TraceContext.new()
+
+    # -- cold run, trace context propagated via the traceparent header ------
+    st, doc = _http(
+        gw.url, "POST", "/v1/workflows",
+        {"spec": spec, "data": [1.0, 2.0], "wait": True},
+        headers={"traceparent": ctx.to_traceparent()},
+    )
+    assert st == 200 and doc["status"] == "done", doc
+    assert doc["trace_id"] == ctx.trace_id
+    assert doc["result"]["n_computed"] == 2
+
+    # -- warm runs: the policy mines history for a couple of runs, then the
+    # stored prefix replaces the slow recompute ------------------------------
+    doc2 = None
+    for _ in range(4):
+        st2, doc2 = _http(
+            gw.url, "POST", "/v1/workflows",
+            {"spec": spec, "data": [1.0, 2.0], "wait": True},
+            headers={"traceparent": TraceContext.new().to_traceparent()},
+        )
+        assert st2 == 200 and doc2["status"] == "done", doc2
+        if doc2["result"]["n_skipped"] >= 1:
+            break
+    assert doc2["result"]["n_skipped"] >= 1
+    assert doc2["result"]["total_seconds"] < SLOW_S / 2
+
+    # -- one stitched trace: gateway -> run -> nodes -> rpcs -> shard ops ---
+    spans = list(iter_spans(trace_dir))
+    mine = [s for s in spans if s["trace"] == ctx.trace_id]
+    names = {s["name"] for s in mine}
+    assert "gateway.submit" in names and "run" in names
+    assert "node" in names and any(n.startswith("rpc") for n in names)
+    gw_span = next(s for s in mine if s["name"] == "gateway.submit")
+    assert gw_span["parent"] == ctx.span_id  # adopted the HTTP caller's ctx
+    run_span = next(s for s in mine if s["name"] == "run")
+    assert run_span["parent"] == gw_span["span"]
+    # server-side spans from at least two shards joined the same trace
+    shard_svcs = {
+        s["svc"] for s in mine if s["name"].startswith("store.")
+    }
+    assert len(shard_svcs) >= 2, shard_svcs
+    processes = {(s["svc"], s["pid"]) for s in mine}
+    assert len(processes) >= 3, processes
+
+    # the CLI stitches the same trace into a renderable tree w/ critical path
+    tree = build_trace(spans, ctx.trace_id)
+    assert tree["roots"] and critical_path(tree)
+    rendered = render_trace(tree)
+    assert "gateway.submit" in rendered and "critical path" in rendered
+
+    # the WARM trace carries the reuse rollup (saved_s on the store.get span)
+    warm_tree = build_trace(spans, doc2["trace_id"])
+    roll = reuse_rollup(warm_tree)
+    assert roll["reuse_hits"] >= 1
+    assert roll["seconds_saved"] > 0.0
+
+    # -- GET /metrics: the whole fabric in one Prometheus page --------------
+    st3, text = _http(gw.url, "GET", "/metrics")
+    assert st3 == 200
+    assert "# TYPE repro_store_server_requests_total counter" in text
+
+    def metric_value(name, **labels):
+        for line in text.splitlines():
+            if not line.startswith(name + "{") and line.split(" ")[0] != name:
+                continue
+            if all(f'{k}="{v}"' in line for k, v in labels.items()):
+                return float(line.rsplit(" ", 1)[1])
+        return None
+
+    assert metric_value("repro_reuse_hits_total") >= 1
+    assert metric_value("repro_reuse_seconds_saved_total") > 0.0
+    assert metric_value("repro_gateway_requests_total", op="accepted") >= 2
+    assert metric_value("repro_runs_total", status="ok") >= 2
+    # server-side series arrive shard-stamped, from >= 2 distinct shards
+    shards = set(
+        re.findall(r'repro_store_server_requests_total\{[^}]*shard="([^"]+)"', text)
+    )
+    assert len(shards) >= 2, shards
+    # non-additive per-shard gauges stayed apart (one uptime series per shard)
+    uptimes = re.findall(r'repro_store_server_uptime_seconds\{[^}]*shard="([^"]+)"', text)
+    assert len(set(uptimes)) == len(servers)
+
+
+def test_cross_process_lease_wait_span_on_non_leader(fabric):
+    gw, client, servers, urls, trace_dir = fabric
+    # a SECOND client process-equivalent (own DistributedSingleFlight, own
+    # lease identity) racing the first on the same uncomputed prefix
+    client2 = Client(store_url=urls, replication=2)
+    _register_slow(client2.registry)
+    spec = WorkflowSpec.from_steps("lease-ds", [("slow", {"seconds": SLOW_S})])
+    try:
+        fut1 = client.submit(spec, [1.0])
+        time.sleep(SLOW_S / 3)  # let the leader take the lease
+        fut2 = client2.submit(spec, [1.0])
+        r1 = fut1.result(timeout=30)
+        r2 = fut2.result(timeout=30)
+        assert r1.output == r2.output == [2.0]
+    finally:
+        client2.close()
+    waits = [s for s in iter_spans(trace_dir) if s["name"] == "lease.wait"]
+    assert waits, "non-leader never recorded a lease.wait span"
+    assert any(s["dur"] > 0.0 for s in waits)
+
+
+def test_tp_field_is_ignored_by_servers_and_optional_for_peers(fabric):
+    """Forward/backward compat of the optional ``tp`` request field: a server
+    answers one-shot ops carrying ``tp`` (and unknown future fields) exactly
+    as without them, and a peer that predates the ``metrics`` op degrades to
+    ``metrics_doc() -> None`` instead of erroring."""
+    gw, client, servers, urls, trace_dir = fabric
+    ctx = TraceContext.new()
+    sock = socket.create_connection(("127.0.0.1", servers[0].port))
+    try:
+        send_frame(
+            sock,
+            {
+                "op": "write_meta", "name": "obs-compat",
+                "tp": ctx.to_traceparent(), "some_future_field": [1, 2],
+            },
+            b"1",
+        )
+        resp, _ = recv_frame(sock)
+        assert resp["ok"] is True
+        send_frame(sock, {"op": "read_meta", "name": "obs-compat", "tp": "garbage"})
+        resp, payload = recv_frame(sock)
+        assert resp["ok"] is True and payload == b"1"
+    finally:
+        sock.close()
+    # the tp-stamped op joined the caller's trace on the server side
+    adopted = [s for s in iter_spans(trace_dir) if s["trace"] == ctx.trace_id]
+    assert any(s["name"] == "store.write_meta" for s in adopted)
+
+
+class _V1Server(StoreServer):
+    """A store server from before the ``metrics`` op existed."""
+    _op_metrics = None
+
+
+def test_pre_metrics_peers_are_skipped_in_cluster_merge(tmp_path):
+    old = _V1Server(MemoryBackend()).start()
+    new = StoreServer(MemoryBackend()).start()
+    sb = ShardedBackend(
+        f"127.0.0.1:{old.port},127.0.0.1:{new.port}", replication=1
+    )
+    try:
+        rb_old = RemoteBackend(f"127.0.0.1:{old.port}")
+        assert rb_old.metrics_doc() is None  # bad_op -> graceful None
+        rb_old.close()
+        doc = sb.metrics_doc()
+        shards = {
+            s["labels"].get("shard")
+            for s in doc["repro_store_server_requests_total"]["series"]
+        }
+        assert shards == {f"127.0.0.1:{new.port}"}
+    finally:
+        sb.close()
+        old.stop()
+        new.stop()
