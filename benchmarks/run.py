@@ -29,7 +29,10 @@ def main() -> None:
         ("risp_ch4 (Figs 4.3-4.6, Table 4.1)", bench_risp.run),
         ("adaptive_risp_ch5 (Figs 5.2-5.5, Table 5.1)", bench_adaptive_risp.run),
         ("time_gain_ch3/ch4 (Table 3.1, Figs 3.5/3.9/4.8)", bench_time_gain.run),
-        ("serving_load_ch6 (Table 6.1)", bench_serving_load.run),
+        (
+            "serving_load_ch6 (Table 6.1 + ISSUE 10 cluster: fabric KV reuse)",
+            bench_serving_load.run,
+        ),
         ("prefix_cache (beyond-paper)", bench_prefix_cache.run),
         ("eviction (gain-loss vs LRU, arXiv 2202.06473)", bench_eviction.run),
         ("dag_scheduler (Ch. 6.3.1 DAGs, concurrent runs)", bench_dag_scheduler.run),

@@ -501,6 +501,73 @@ class Client:
         merged.sort(key=rank_key)
         return merged
 
+    # -- serving -----------------------------------------------------------------
+    def serve_engine(
+        self,
+        cfg: Any,
+        params: Any,
+        *,
+        dataset_id: str = "prompts",
+        policy: "StoragePolicy | None" = None,
+        snapshot_budget_bytes: int | None = None,
+        snapshot_codec: str | None = "none",
+        ledger: Any = None,
+        tenant: str | None = None,
+        **engine_kw: Any,
+    ) -> "Any":
+        """Mount a :class:`~repro.serve.ServeEngine` on this client's fabric.
+
+        The engine's KV-prefix snapshots become first-class artifacts on the
+        client's backend (local store dir, remote pool, or shard cluster —
+        read through the same hot cache workflow artifacts use), encoded by
+        the deterministic KV codec and published to the provenance catalog.
+        With a remote mount, prefill is a *coordinated compute*: the
+        store-server lease table elects exactly one prefiller per shared
+        prompt prefix fleet-wide (followers block, then load the leader's
+        snapshot), and fleet eviction events keep every engine's
+        ``policy.stored`` free of phantoms.
+
+        ``dataset_id`` is composed with the client's namespace, so snapshot
+        keys are tenant-scoped exactly like workflow artifacts.  ``ledger``
+        (a :class:`~repro.sched.stats.TenantLedger`) bills stored snapshot
+        bytes to ``tenant`` (default: the client's namespace) and is credited
+        on every eviction path.  Remaining ``engine_kw`` (``max_len``,
+        ``chunk``, ``greedy``, ...) pass through to ``ServeEngine``.
+        """
+        from ..core.risp import RISP
+        from ..serve import FabricSnapshotStore, ServeEngine
+
+        snapshots = FabricSnapshotStore(
+            self.store.backend,
+            capacity_bytes=snapshot_budget_bytes,
+            codec=snapshot_codec,
+            registry=self.metrics,
+            catalog=self.catalog,
+            ledger=ledger,
+            tenant=tenant if tenant is not None else (self.namespace or ""),
+            events_from=self._remote,
+        )
+        if self._remote is not None:
+            from ..net import DistributedSingleFlight
+
+            flight: SingleFlight = DistributedSingleFlight(
+                self._remote, stored_fn=snapshots.contains, registry=self.metrics
+            )
+        else:
+            # still coalesces concurrent identical prefixes in-process
+            flight = SingleFlight(registry=self.metrics)
+        return ServeEngine(
+            cfg=cfg,
+            params=params,
+            policy=policy if policy is not None else RISP(),
+            registry=self.registry,
+            snapshots=snapshots,
+            flight=flight,
+            metrics=self.metrics,
+            dataset_id=namespaced_dataset(self.namespace, dataset_id),
+            **engine_kw,
+        )
+
     # -- reporting / lifecycle -----------------------------------------------------
     def stats(self) -> AggregateStats:
         """Aggregate throughput/reuse across BOTH engines (sequential runs +

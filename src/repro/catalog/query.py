@@ -8,11 +8,18 @@ Works against every deployment:
   query server-side (``catalog_query``), fanning out and merging when the
   url names more than one shard.
 
+``--dedup`` switches the tool from find-by-statepoint to a cross-namespace
+duplication report: identical module chains (same dataset, same modules,
+same encoded tool states) stored under several ``tenant:*`` namespaces are
+promotion candidates — keep one copy under ``shared`` and the rest of the
+bytes come back.
+
 Examples::
 
     python -m repro.catalog.query --root /tmp/store --module align --param k=31
     python -m repro.catalog.query --store-url tcp://localhost:7077 \
         --module train --param lr=0.1 --dataset d1 --json
+    python -m repro.catalog.query --root /tmp/store --dedup
 """
 from __future__ import annotations
 
@@ -53,6 +60,73 @@ def _open_catalog(args: argparse.Namespace) -> Catalog:
     from ..core.backends import LocalFSBackend
 
     return Catalog(LocalFSBackend(args.root), persist=True)
+
+
+def _chain_identity(rec: CatalogRecord) -> tuple:
+    """Hashable content identity of an artifact *ignoring namespace*: same
+    bare dataset, same module chain, same encoded tool states at every
+    position.  Two records with equal identities hold the same bytes — the
+    store key differs only in the namespace segment."""
+    return (
+        rec.dataset,
+        rec.modules,
+        tuple(tuple(sorted(s.items())) for s in rec.states),
+    )
+
+
+def dedup_report(
+    records: "Sequence[CatalogRecord]", *, tenant_only: bool = True
+) -> list[dict[str, Any]]:
+    """Group records by content identity and report every group stored under
+    more than one namespace.  Each entry names the namespaces holding a copy,
+    the canonical copy to keep (most-reused, ties to oldest), and the bytes
+    reclaimed by promoting it to ``shared`` and dropping the rest.
+
+    ``tenant_only`` restricts the scan to ``tenant:*`` namespaces — the
+    multi-tenant case the gateway creates; pass ``False`` to consider every
+    namespace (including ``""`` and ``shared`` itself).
+    """
+    groups: dict[tuple, list[CatalogRecord]] = {}
+    for rec in records:
+        if tenant_only and not rec.namespace.startswith("tenant:"):
+            continue
+        groups.setdefault(_chain_identity(rec), []).append(rec)
+
+    report: list[dict[str, Any]] = []
+    for members in groups.values():
+        namespaces = {r.namespace for r in members}
+        if len(namespaces) < 2:
+            continue
+        # keep the copy with the best reuse record; oldest breaks ties so
+        # the choice is stable across runs
+        keep = min(members, key=lambda r: (-r.n_loads, r.created_at, r.key))
+        reclaimable = sum(r.nbytes for r in members) - keep.nbytes
+        report.append(
+            {
+                "dataset": keep.dataset,
+                "modules": list(keep.modules),
+                "depth": keep.depth,
+                "params": keep.params(),
+                "namespaces": sorted(namespaces),
+                "n_copies": len(members),
+                "keep": keep.key,
+                "promote_to": "shared",
+                "reclaimable_bytes": reclaimable,
+                "total_loads": sum(r.n_loads for r in members),
+            }
+        )
+    report.sort(key=lambda e: (-e["reclaimable_bytes"], e["keep"]))
+    return report
+
+
+def _fmt_dedup_entry(entry: dict[str, Any]) -> str:
+    chain = ">".join(entry["modules"])
+    nss = ",".join(entry["namespaces"])
+    return (
+        f"{entry['dataset']:16s} {chain:40s} x{entry['n_copies']} "
+        f"[{nss}] reclaim={entry['reclaimable_bytes']}B "
+        f"loads={entry['total_loads']} keep={entry['keep']}"
+    )
 
 
 def _fmt_row(rec: CatalogRecord) -> str:
@@ -96,12 +170,45 @@ def main(argv: "Sequence[str] | None" = None) -> int:
         "--replication", type=int, default=2, help="cluster replica-set size"
     )
     ap.add_argument("--json", action="store_true", help="emit records as JSON")
+    ap.add_argument(
+        "--dedup",
+        action="store_true",
+        help="report identical chains duplicated across tenant namespaces "
+        "(promotion-to-shared candidates with reclaimable bytes)",
+    )
+    ap.add_argument(
+        "--all-namespaces",
+        action="store_true",
+        help="with --dedup: consider every namespace, not just tenant:*",
+    )
     args = ap.parse_args(argv)
     if args.param and not args.module:
         ap.error("--param needs --module to anchor it")
+    if args.dedup and (args.module or args.param or args.namespace):
+        ap.error("--dedup scans whole catalogs; it only composes with "
+                 "--dataset and --json")
 
     catalog = _open_catalog(args)
     try:
+        if args.dedup:
+            # full scan: an unfiltered query returns every record the
+            # catalog (or cluster, merged) knows about
+            scan = CatalogQuery.build(dataset=args.dataset, limit=1_000_000)
+            report = dedup_report(
+                catalog.query(scan), tenant_only=not args.all_namespaces
+            )
+            if args.json:
+                print(json.dumps(report, indent=2))
+            else:
+                for entry in report:
+                    print(_fmt_dedup_entry(entry))
+                total = sum(e["reclaimable_bytes"] for e in report)
+                print(
+                    f"{len(report)} duplicated chain(s), "
+                    f"{total} byte(s) reclaimable by promotion to shared",
+                    file=sys.stderr,
+                )
+            return 0
         q = CatalogQuery.build(
             module=args.module,
             params=dict(args.param),

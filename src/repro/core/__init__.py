@@ -12,6 +12,7 @@ from .eviction import (
     gain_loss_ratio,
 )
 from .executor import RunResult, WorkflowError, WorkflowExecutor
+from .kvcodec import KVSnapshotInfo, load_kv, read_kv_info, save_kv
 from .metrics import PolicyReport, evaluate_all, evaluate_policy
 from .provenance import ProvenanceLog, RunRecord
 from .registry import ModuleRegistry, ToolStateError, UnknownModuleError
@@ -37,6 +38,7 @@ __all__ = [
     "EvictionPolicy",
     "GainLossEviction",
     "IntermediateStore",
+    "KVSnapshotInfo",
     "LRUEviction",
     "LocalFSBackend",
     "MemoryBackend",
@@ -76,7 +78,10 @@ __all__ = [
     "galaxy_ch4_corpus",
     "galaxy_ch5_corpus",
     "generate_corpus",
+    "load_kv",
     "make_policy",
+    "read_kv_info",
     "register_codec",
     "resolve_codec",
+    "save_kv",
 ]

@@ -318,7 +318,11 @@ class MemoryBackend(StorageBackend):
         self._meta: dict[str, str] = {}
 
     def write_blob(self, key: str, name: str, data: bytes) -> int:
-        self._objects.setdefault(key, {})[name] = data
+        # callers may hand a memoryview over a live buffer (the KV codec's
+        # zero-copy path); snapshot it so the stored blob can't alias it
+        self._objects.setdefault(key, {})[name] = (
+            data if isinstance(data, bytes) else bytes(data)
+        )
         return len(data)
 
     def read_blob(self, key: str, name: str) -> bytes:

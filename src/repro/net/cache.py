@@ -144,6 +144,10 @@ class CachingBackend(StorageBackend):
         prev = self._blobs.pop(ck, None)
         if prev is not None:
             self._nbytes -= len(prev[0])
+        if not isinstance(data, bytes):
+            # writes may pass a memoryview over a live buffer (KV codec's
+            # zero-copy path); cache an immutable snapshot, never an alias
+            data = bytes(data)
         self._blobs[ck] = (data, digest(data))
         self._names.setdefault(key, set()).add(name)
         self._nbytes += len(data)

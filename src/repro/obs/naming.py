@@ -16,11 +16,12 @@ from __future__ import annotations
 
 __all__ = ["ALIASES", "SURFACES"]
 
-#: the three legacy stats surfaces and the accessor that produces each
+#: the legacy stats surfaces and the accessor that produces each
 SURFACES = {
     "store_server": "repro.net.server.StoreServer.stats()",
     "cluster": "repro.net.sharded.ShardedBackend.server_stats()",
     "gateway": "repro.gateway.server.GatewayServer.stats_doc()",
+    "serve": "repro.serve.ServeEngine.aggregate_stats()",
 }
 
 ALIASES: dict[str, str] = {
@@ -59,4 +60,16 @@ ALIASES: dict[str, str] = {
     "gateway:tenant.rejected": "repro_tenant_rejected_total{tenant=*}",
     "gateway:tenant.in_flight": "repro_tenant_inflight{tenant=*}",
     "gateway:tenant.bytes_stored": "repro_tenant_stored_bytes{tenant=*}",
+    # -- ServeEngine.aggregate_stats() (AggregateStats shape; ISSUE 10 moved
+    # the engine's ad-hoc tallies onto the registry — the dataclass fields
+    # below are reconstructed from these canonical series) ------------------
+    "serve:runs": "repro_serve_requests_total",
+    "serve:busy_seconds": "repro_serve_busy_seconds_total",
+    "serve:units_total": "repro_serve_chunks_total",
+    "serve:units_skipped": "repro_serve_chunks_skipped_total",
+    "serve:stored": "repro_serve_snapshots_stored_total",
+    # snapshot-store accounting (SnapshotStore attribute aliases)
+    "serve:n_snapshots": "repro_serve_snapshots",
+    "serve:snapshot_bytes": "repro_serve_snapshot_stored_bytes",
+    "serve:n_snapshot_evictions": "repro_serve_snapshot_evictions_total{source=*}",
 }

@@ -1,5 +1,21 @@
 from ..sched.service import WorkflowService
 from ..sched.stats import AggregateStats
-from .engine import GenStats, ServeEngine
+from .engine import GenStats, ServeEngine, ServeMetrics
+from .snapshots import (
+    FabricSnapshotStore,
+    LoadedSnapshot,
+    MemorySnapshotStore,
+    SnapshotStore,
+)
 
-__all__ = ["AggregateStats", "GenStats", "ServeEngine", "WorkflowService"]
+__all__ = [
+    "AggregateStats",
+    "FabricSnapshotStore",
+    "GenStats",
+    "LoadedSnapshot",
+    "MemorySnapshotStore",
+    "ServeEngine",
+    "ServeMetrics",
+    "SnapshotStore",
+    "WorkflowService",
+]

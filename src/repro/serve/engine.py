@@ -8,6 +8,16 @@ KV states to retain.  High-confidence shared prefixes (system prompts,
 few-shot preambles) get their KV snapshot stored; later requests skip
 prefilling them.  This is RadixAttention-style prefix caching with a
 *mined admission policy* instead of cache-everything + LRU.
+
+Where snapshots live is a seam (:mod:`repro.serve.snapshots`): the default
+:class:`MemorySnapshotStore` keeps the legacy engine-private behavior, while
+a :class:`FabricSnapshotStore` puts snapshots on the shared artifact fabric
+so N serving processes reuse each other's prefills.  On the fabric, prefill
+itself becomes a *coordinated compute*: when a ``flight``
+(:class:`~repro.net.flight.DistributedSingleFlight`) is wired, exactly one
+engine fleet-wide prefills a shared prefix (the leader stores the snapshot;
+followers block on the lease, then load it) — the same exactly-once
+discipline the workflow scheduler applies to module computes.
 """
 from __future__ import annotations
 
@@ -22,13 +32,15 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import LMConfig
-from ..core.eviction import EvictionContext, EvictionManager
 from ..core.registry import ModuleRegistry
-from ..core.risp import RISP, StoragePolicy
-from ..core.store import ArtifactRecord
+from ..core.risp import RISP, StoragePolicy, StoredRecord
 from ..core.workflow import ModuleRef, Workflow
 from ..models import transformer
+from ..obs import tracing as _tracing
+from ..obs.metrics import MetricsRegistry
+from ..sched.singleflight import SingleFlight
 from ..sched.stats import AggregateStats
+from .snapshots import MemorySnapshotStore, SnapshotStore
 
 
 def _chunk_id(tokens: np.ndarray) -> str:
@@ -46,6 +58,59 @@ class GenStats:
     n_new_tokens: int
 
 
+class ServeMetrics:
+    """The canonical ``repro_serve_*`` instruments.
+
+    One home for every serving counter; :meth:`ServeEngine.aggregate_stats`
+    is reconstructed from these (the legacy ``AggregateStats`` shape survives
+    as an alias — see ``obs/naming.py::ALIASES``).
+    """
+
+    def __init__(self, registry: MetricsRegistry) -> None:
+        m = registry
+        self.requests = m.counter(
+            "repro_serve_requests_total", "generation requests served"
+        )
+        self.chunks = m.counter(
+            "repro_serve_chunks_total", "prompt chunks across all requests"
+        )
+        self.chunks_skipped = m.counter(
+            "repro_serve_chunks_skipped_total",
+            "prompt chunks skipped by restoring a KV snapshot",
+        )
+        self.tokens = m.counter("repro_serve_tokens_total", "new tokens decoded")
+        self.stored = m.counter(
+            "repro_serve_snapshots_stored_total",
+            "KV snapshot admissions by this engine",
+        )
+        self.busy = m.counter(
+            "repro_serve_busy_seconds_total", "seconds spent prefilling + decoding"
+        )
+        self.saved = m.counter(
+            "repro_serve_prefill_saved_seconds_total",
+            "prefill seconds avoided by snapshot reuse (measured cost minus load)",
+        )
+        self.prefill_s = m.histogram(
+            "repro_serve_prefill_seconds", "per-request prefill wall seconds"
+        )
+        self.decode_s = m.histogram(
+            "repro_serve_decode_seconds", "per-request decode wall seconds"
+        )
+
+
+@dataclass
+class _PrefixResult:
+    """State after materializing a prompt prefix (the coordinated unit)."""
+
+    cache: Any  # device cache pytree at ``depth`` chunks
+    cache_len: Any  # jnp [1] int32
+    depth: int  # chunks materialized in ``cache``
+    logits: Any | None  # logits of the last prefilled chunk (None: none ran)
+    skipped: int  # chunks restored from a snapshot instead of prefilled
+    stored: int  # snapshot admissions performed
+    prefill_s: float  # wall seconds of prefill done here
+
+
 @dataclass
 class ServeEngine:
     cfg: LMConfig
@@ -54,7 +119,8 @@ class ServeEngine:
     chunk: int = 32
     policy: StoragePolicy = field(default_factory=RISP)
     greedy: bool = True
-    # KV-snapshot memory budget: same gain-loss retention as the disk store
+    # KV-snapshot budget for the default in-memory tier: same gain-loss
+    # retention as the disk store (ignored when ``snapshots`` is passed)
     snapshot_budget_bytes: int | None = None
     eviction: str = "gain_loss"
     # optional shared ModuleRegistry: observed prompt chunks are recorded as
@@ -63,15 +129,37 @@ class ServeEngine:
     # the workflow engines consume (repro.api.Client wires one across all
     # front doors)
     registry: ModuleRegistry | None = None
+    # where snapshots live (None -> engine-private MemorySnapshotStore);
+    # pass a FabricSnapshotStore to share prefills across processes
+    snapshots: SnapshotStore | None = None
+    # single-flight election over shared-prefix prefills; a
+    # DistributedSingleFlight makes the election fleet-wide
+    flight: SingleFlight | None = None
+    metrics: MetricsRegistry | None = None
+    # dataset identity of the prompt workflows (Client.serve_engine composes
+    # its namespace in, so snapshot keys are tenant-scoped like any artifact)
+    dataset_id: str = "prompts"
 
     def __post_init__(self) -> None:
-        self._snapshots: dict[str, tuple[Any, int]] = {}  # key -> (host cache, len)
-        self._snap_records: dict[str, ArtifactRecord] = {}
-        self._evictor = EvictionManager(self.snapshot_budget_bytes, self.eviction)
+        if self.metrics is None:
+            self.metrics = (
+                self.snapshots.metrics
+                if self.snapshots is not None
+                else MetricsRegistry()
+            )
+        if self.snapshots is None:
+            self.snapshots = MemorySnapshotStore(
+                self.snapshot_budget_bytes, self.eviction, registry=self.metrics
+            )
+        # every removal path (budget eviction, fleet event, phantom probe)
+        # funnels through the store's listeners: the policy's claim of the
+        # snapshot dies with the snapshot — never the other way around.
+        # GIL-atomic pop without the policy lock (documented lock order).
+        self.snapshots.add_evict_listener(
+            lambda key: self.policy.stored.pop(key, None)
+        )
+        self._sm = ServeMetrics(self.metrics)
         self._chunk_prefill_s = 0.0  # EMA seconds to prefill one chunk
-        # O(1) running aggregates (a serving process outlives any per-request
-        # history it could afford to keep)
-        self._agg = AggregateStats()
         self._t_first: float | None = None
         self._t_last = 0.0
         self._prefill = jax.jit(
@@ -89,70 +177,84 @@ class ServeEngine:
                 self.registry.ensure(
                     m.module_id, cost_hint=self._chunk_prefill_s or None
                 )
-        return Workflow("prompts", mods, workflow_id=f"req{self.policy.n_pipelines}")
-
-    def _snapshot(self, key: str, cache: Any, length: int, depth: int) -> bool:
-        """Store a KV snapshot; returns False if the budget rejects it."""
-        host = jax.tree_util.tree_map(lambda a: np.asarray(a), cache)
-        nbytes = sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(host))
-        if not self._evictor.admits(nbytes):
-            return False
-        self._snapshots[key] = (host, length)
-        # recompute cost of this snapshot = re-prefilling ``depth`` chunks
-        self._snap_records[key] = ArtifactRecord(
-            key, nbytes, nbytes, save_s=0.0, compute_s=self._chunk_prefill_s * depth
+        return Workflow(
+            self.dataset_id, mods, workflow_id=f"req{self.policy.n_pipelines}"
         )
-        victims = self._evictor.select_victims(
-            self._snap_records, self.snapshot_bytes(),
-            ctx=EvictionContext(load_bps=4e9), incoming=key,
-        )
-        for victim in victims:
-            self._drop_snapshot(victim)
-        return key not in victims
 
-    def _drop_snapshot(self, key: str) -> None:
-        self._snapshots.pop(key, None)
-        self._snap_records.pop(key, None)
-        self.policy.stored.pop(key, None)
+    def _load_snapshot(self, key: str, depth: int) -> "Any | None":
+        """Restore one snapshot, crediting the measured time it saved."""
+        with _tracing.span("serve.snapshot.load", kind="serve", key=key) as sp:
+            snap = self.snapshots.load(key)
+            if snap is None:
+                sp.set(status="miss")
+                return None
+            recompute = snap.prefill_s or depth * self._chunk_prefill_s
+            saved = max(recompute - snap.load_s, 0.0)
+            sp.set(source="snapshot", saved_s=round(saved, 6), depth=depth)
+            self._sm.saved.inc(saved)
+        return snap
 
-    def _restore(self, key: str) -> tuple[Any, int]:
-        host, length = self._snapshots[key]
-        rec = self._snap_records.get(key)
-        if rec is not None:
-            rec.n_loads += 1
-            rec.last_used_at = time.time()
-        return jax.tree_util.tree_map(jnp.asarray, host), length
+    # -- prefill -------------------------------------------------------------
+    def _prefill_prefix(
+        self,
+        chunks: list[np.ndarray],
+        wf: Workflow,
+        rec: Any,
+        depth_keys: dict[int, str],
+        upto: int,
+        presence: "dict[str, bool | None] | None" = None,
+    ) -> _PrefixResult:
+        """Materialize the first ``upto`` chunks: restore the deepest live
+        snapshot, prefill the rest, store what the policy admitted.
 
-    # -- generation ---------------------------------------------------------
-    def generate(
-        self, prompt: list[int] | np.ndarray, max_new_tokens: int = 16
-    ) -> tuple[list[int], GenStats]:
-        prompt = np.asarray(prompt, np.int32)
-        pad = (-len(prompt)) % self.chunk
-        padded = np.concatenate([np.zeros(pad, np.int32), prompt])  # left-pad
-        chunks = [padded[i : i + self.chunk] for i in range(0, len(padded), self.chunk)]
-        wf = self._workflow(chunks)
-        rec = self.policy.step(wf)
+        This is the unit a single-flight leader runs.  A follower re-running
+        it after the leader finishes re-probes and finds the leader's
+        snapshot — so it prefills nothing (the exactly-once property)."""
+        ws = self.policy.with_state
+        if presence is None:
+            presence = self.snapshots.presence_many(list(depth_keys.values()))
+        # authoritative absences invalidate any claim the policy still holds
+        # (same discipline as the executor's probe walk; ``None`` =
+        # unreachable is deliberately NOT evidence of absence) — except the
+        # claims ``policy.step`` just admitted for THIS request: those are
+        # pending the save below, not stale
+        pending = {p.key(ws) for p in rec.store}
+        for key in depth_keys.values():
+            if presence.get(key) is False and key not in pending:
+                self.policy.stored.pop(key, None)
 
-        # longest stored prefix with a live snapshot
         start, cache, cache_len_i = 0, None, 0
-        cand = rec.reuse
-        while cand is not None:
-            key = cand.key(self.policy.with_state)
-            if key in self._snapshots:
-                cache, cache_len_i = self._restore(key)
-                start = cand.depth
-                break
-            self.policy.stored.pop(key, None)
-            cand = cand.parent()
+        for d in range(upto, 0, -1):
+            key = depth_keys[d]
+            if not presence.get(key):
+                continue
+            snap = self._load_snapshot(key, d)
+            if snap is None:
+                continue  # phantom: the store already pruned + notified
+            cache = jax.tree_util.tree_map(jnp.asarray, snap.cache)
+            cache_len_i = snap.length
+            start = d
+            # cross-process adoption: mining in this process may never have
+            # admitted this prefix — record that it is stored so the policy
+            # recommends reusing it next time
+            self.policy.stored.setdefault(
+                key, StoredRecord(wf.prefix(d), self.policy.n_pipelines)
+            )
+            break
         if cache is None:
             cache = transformer.init_cache(self.cfg, 1, self.max_len)
 
         t0 = time.perf_counter()
         cache_len = jnp.asarray([cache_len_i], jnp.int32)
         logits = None
-        boundary_caches: dict[int, tuple[Any, int]] = {}
-        for i in range(start, len(chunks)):
+        boundary: dict[int, tuple[Any, int]] = {}
+        # measured recompute cost of each boundary's prefix: seconds actually
+        # spent this request, plus the EMA-priced skipped part — this is what
+        # gain-loss eviction will charge to re-create the snapshot
+        boundary_cost: dict[int, float] = {}
+        base_cost = start * self._chunk_prefill_s
+        cum = 0.0
+        for i in range(start, upto):
             tok = jnp.asarray(chunks[i][None], jnp.int32)
             tc = time.perf_counter()
             logits, cache, cache_len = self._prefill(self.params, tok, cache, cache_len)
@@ -162,21 +264,102 @@ class ServeEngine:
                 dt if not self._chunk_prefill_s
                 else 0.3 * dt + 0.7 * self._chunk_prefill_s
             )
-            boundary_caches[i + 1] = (cache, int(cache_len[0]))
+            cum += dt
+            boundary[i + 1] = (cache, int(cache_len[0]))
+            boundary_cost[i + 1] = base_cost + cum
         prefill_s = time.perf_counter() - t0
 
         # store admitted prefixes (only those whose boundary we computed)
         stored = 0
         for prefix in rec.store:
-            key = prefix.key(self.policy.with_state)
-            if prefix.depth in boundary_caches:
-                c, ln = boundary_caches[prefix.depth]
-                if self._snapshot(key, c, ln, prefix.depth):
+            if prefix.depth > upto:
+                continue  # a later (uncoordinated) stage never stores
+            key = prefix.key(ws)
+            if prefix.depth in boundary:
+                c, ln = boundary[prefix.depth]
+                if self.snapshots.save(
+                    key, c, ln,
+                    prefill_s=boundary_cost[prefix.depth],
+                    prefix=prefix,
+                ):
                     stored += 1
-                else:  # snapshot alone exceeds the whole budget
+                else:  # budget (or fabric) rejected the snapshot
                     self.policy.stored.pop(key, None)
+            elif presence.get(key):
+                pass  # inside the restored region: already on the store
             else:
                 self.policy.stored.pop(key, None)
+        return _PrefixResult(
+            cache=cache,
+            cache_len=cache_len,
+            depth=upto,
+            logits=logits,
+            skipped=start,
+            stored=stored,
+            prefill_s=prefill_s,
+        )
+
+    # -- generation ---------------------------------------------------------
+    def generate(
+        self, prompt: list[int] | np.ndarray, max_new_tokens: int = 16
+    ) -> tuple[list[int], GenStats]:
+        prompt = np.asarray(prompt, np.int32)
+        pad = (-len(prompt)) % self.chunk
+        padded = np.concatenate([np.zeros(pad, np.int32), prompt])  # left-pad
+        chunks = [padded[i : i + self.chunk] for i in range(0, len(padded), self.chunk)]
+        n = len(chunks)
+        wf = self._workflow(chunks)
+        rec = self.policy.step(wf)
+        ws = self.policy.with_state
+        depth_keys = {d: wf.prefix(d).key(ws) for d in range(1, n + 1)}
+
+        # the coordination unit: the deepest prefix this request was asked to
+        # store — fleet-wide, exactly one engine should prefill it
+        coord_depth = max((p.depth for p in rec.store), default=0)
+
+        with _tracing.span("serve.prefill", kind="serve") as sp:
+            t_pf = time.perf_counter()
+            if self.flight is not None and coord_depth > 0:
+                value, leader = self.flight.run(
+                    depth_keys[coord_depth],
+                    lambda: self._prefill_prefix(
+                        chunks, wf, rec, depth_keys, upto=coord_depth
+                    ),
+                )
+                if not leader:
+                    # coalesced in-process behind the leader: the shared
+                    # prefix arrived computed — all of it counts as skipped
+                    value = _PrefixResult(
+                        cache=value.cache,
+                        cache_len=value.cache_len,
+                        depth=value.depth,
+                        logits=value.logits,
+                        skipped=value.depth,
+                        stored=0,
+                        prefill_s=0.0,
+                    )
+            else:
+                value = self._prefill_prefix(chunks, wf, rec, depth_keys, upto=n)
+
+            # uncoordinated remainder: this request's private suffix
+            cache, cache_len = value.cache, value.cache_len
+            logits = value.logits
+            t_ext = time.perf_counter()
+            for i in range(value.depth, n):
+                tok = jnp.asarray(chunks[i][None], jnp.int32)
+                tc = time.perf_counter()
+                logits, cache, cache_len = self._prefill(
+                    self.params, tok, cache, cache_len
+                )
+                jax.block_until_ready(logits)
+                dt = time.perf_counter() - tc
+                self._chunk_prefill_s = (
+                    dt if not self._chunk_prefill_s
+                    else 0.3 * dt + 0.7 * self._chunk_prefill_s
+                )
+            prefill_s = value.prefill_s + (time.perf_counter() - t_ext)
+            sp.set(n=n, skipped=value.skipped, stored=value.stored)
+        stored = value.stored
 
         # decode
         t1 = time.perf_counter()
@@ -196,21 +379,25 @@ class ServeEngine:
 
         stats = GenStats(
             prompt_len=len(prompt),
-            n_chunks=len(chunks),
-            chunks_skipped=start,
+            n_chunks=n,
+            chunks_skipped=value.skipped,
             prefill_s=prefill_s,
             decode_s=decode_s,
             stored_prefixes=stored,
             n_new_tokens=len(out),
         )
         if self._t_first is None:
-            self._t_first = t0
+            self._t_first = t_pf
         self._t_last = time.perf_counter()
-        self._agg.runs += 1
-        self._agg.busy_seconds += stats.prefill_s + stats.decode_s
-        self._agg.units_total += stats.n_chunks
-        self._agg.units_skipped += stats.chunks_skipped
-        self._agg.stored += stats.stored_prefixes
+        m = self._sm
+        m.requests.inc()
+        m.chunks.inc(stats.n_chunks)
+        m.chunks_skipped.inc(stats.chunks_skipped)
+        m.tokens.inc(stats.n_new_tokens)
+        m.stored.inc(stats.stored_prefixes)
+        m.busy.inc(stats.prefill_s + stats.decode_s)
+        m.prefill_s.observe(stats.prefill_s)
+        m.decode_s.observe(stats.decode_s)
         return out, stats
 
     def _trim_last_chunk(self, cache, cache_len):
@@ -232,32 +419,31 @@ class ServeEngine:
     # -- accounting -----------------------------------------------------------
     @property
     def n_snapshots(self) -> int:
-        return len(self._snapshots)
+        return self.snapshots.n_snapshots
 
     @property
     def n_snapshot_evictions(self) -> int:
-        return self._evictor.n_evictions
+        return self.snapshots.n_evictions
 
     def snapshot_bytes(self) -> int:
-        total = 0
-        for host, _ in self._snapshots.values():
-            for leaf in jax.tree_util.tree_leaves(host):
-                total += leaf.nbytes
-        return total
+        return self.snapshots.snapshot_bytes()
 
     def aggregate_stats(self) -> AggregateStats:
         """Fleet-level view in the scheduler service's shape: one request =
-        one run, one prompt chunk = one work unit (skipped = prefill reuse)."""
+        one run, one prompt chunk = one work unit (skipped = prefill reuse).
+        Reconstructed from the canonical ``repro_serve_*`` registry series
+        (the legacy shape is an alias — ``obs/naming.py::ALIASES``)."""
         wall = (
             (self._t_last - self._t_first)
             if self._t_first is not None and self._t_last
             else 0.0
         )
+        m = self._sm
         return AggregateStats(
-            runs=self._agg.runs,
+            runs=int(m.requests.value),
             wall_seconds=max(wall, 0.0),
-            busy_seconds=self._agg.busy_seconds,
-            units_total=self._agg.units_total,
-            units_skipped=self._agg.units_skipped,
-            stored=self._agg.stored,
+            busy_seconds=m.busy.value,
+            units_total=int(m.chunks.value),
+            units_skipped=int(m.chunks_skipped.value),
+            stored=int(m.stored.value),
         )

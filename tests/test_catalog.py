@@ -421,3 +421,63 @@ def test_client_remote_catalog_survives_client_churn(server, tmp_path):
         assert len(c2.catalog.index) == 0
     finally:
         c2.close()
+
+
+# -- cross-namespace dedup report ----------------------------------------------
+def _tenant_rec(ns, dataset="ds", chain=(("load", {"scale": 2}),), **stats):
+    return _rec(f"{ns}/{dataset}", chain, **stats)
+
+
+def test_dedup_report_groups_identical_chains_across_tenants():
+    from repro.catalog.query import dedup_report
+
+    a = _tenant_rec("tenant:a", nbytes=100, n_loads=5)
+    b = _tenant_rec("tenant:b", nbytes=100, n_loads=1)
+    c = _tenant_rec("tenant:c", nbytes=100)
+    # same chain but different params: NOT a duplicate
+    other = _tenant_rec("tenant:b", chain=(("load", {"scale": 3}),), nbytes=50)
+    # duplicated only within one tenant: NOT a cross-namespace candidate
+    solo = _tenant_rec("tenant:a", dataset="ds2", nbytes=10)
+    report = dedup_report([a, b, c, other, solo])
+    assert len(report) == 1
+    entry = report[0]
+    assert entry["namespaces"] == ["tenant:a", "tenant:b", "tenant:c"]
+    assert entry["n_copies"] == 3
+    assert entry["keep"] == a.key, "most-reused copy is kept"
+    assert entry["promote_to"] == "shared"
+    assert entry["reclaimable_bytes"] == 200
+    assert entry["total_loads"] == 6
+    assert entry["params"] == {"scale": 2}
+
+
+def test_dedup_report_tenant_only_toggle():
+    from repro.catalog.query import dedup_report
+
+    shared = _rec("shared/ds", (("load", {"scale": 2}),), nbytes=10)
+    tenant = _tenant_rec("tenant:a", nbytes=10)
+    assert dedup_report([shared, tenant]) == []
+    full = dedup_report([shared, tenant], tenant_only=False)
+    assert len(full) == 1
+    assert full[0]["namespaces"] == ["shared", "tenant:a"]
+
+
+def test_dedup_cli_end_to_end(tmp_path, capsys):
+    from repro.catalog.query import main as query_main
+
+    cat = Catalog(LocalFSBackend(tmp_path))
+    for ns, loads in (("tenant:a", 3), ("tenant:b", 0)):
+        p = _prefix(f"{ns}/ds")
+        cat.publish(p, p.key(True))
+        rec = cat.index.get(p.key(True))
+        rec.nbytes, rec.n_loads = 40, loads
+    cat.flush()
+    assert query_main(["--root", str(tmp_path), "--dedup", "--json"]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert len(report) == 1
+    assert report[0]["reclaimable_bytes"] == 40
+    assert report[0]["namespaces"] == ["tenant:a", "tenant:b"]
+    # human output mode runs clean too
+    assert query_main(["--root", str(tmp_path), "--dedup"]) == 0
+    out, err = capsys.readouterr()
+    assert "tenant:a,tenant:b" in out
+    assert "40 byte(s) reclaimable" in err

@@ -364,16 +364,27 @@ class TestAliasContract:
             ALIASES["gateway:tenant.bytes_stored"]
             == "repro_tenant_stored_bytes{tenant=*}"
         )
+        assert ALIASES["serve:runs"] == "repro_serve_requests_total"
+        assert ALIASES["serve:units_skipped"] == "repro_serve_chunks_skipped_total"
+        assert ALIASES["serve:snapshot_bytes"] == "repro_serve_snapshot_stored_bytes"
 
     def test_every_canonical_name_exists_on_live_surfaces(self):
-        """Stand up the whole fabric (server + cluster client + gateway) and
-        prove each canonical metric in the alias map is actually registered
-        somewhere — a silent rename breaks the map and fails here."""
+        """Stand up the whole fabric (server + cluster client + gateway +
+        serve surfaces) and prove each canonical metric in the alias map is
+        actually registered somewhere — a silent rename breaks the map and
+        fails here."""
+        from repro.serve.engine import ServeMetrics
+        from repro.serve.snapshots import MemorySnapshotStore
+
         servers = [StoreServer(MemoryBackend()).start() for _ in range(2)]
         urls = ",".join(f"127.0.0.1:{s.port}" for s in servers)
         client = Client(store_url=urls)
         register_demo_modules(client.registry)
         gw = GatewayServer(client, TokenAuthenticator({"t": "alice"}))
+        # serve metrics live on whichever registry the engine mounts; bind
+        # them to the client registry the way Client.serve_engine() does
+        ServeMetrics(client.metrics)
+        MemorySnapshotStore(registry=client.metrics)
         try:
             registered = set(client.metrics.to_doc())
             for s in servers:

@@ -1,0 +1,297 @@
+"""Distributed KV-prefix reuse: codec exactness, racing engines, zero phantoms.
+
+The fabric-serving acceptance contract (ISSUE 10):
+
+* the KV codec round-trips bit-exactly, and a generation served entirely
+  from restored snapshots produces the same tokens as a cold prefill;
+* two engines racing on one shared prefix prefill it exactly once
+  (fleet-wide single-flight election over the store-server lease table);
+* a leader dying mid-prefill does not wedge the fleet — a follower
+  re-elects and completes;
+* eviction anywhere leaves zero phantoms: snapshot records, the policy's
+  ``stored`` claims, the provenance catalog, and the tenant ledger all
+  converge, in-process and across the event stream.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.catalog import Catalog
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.core import LocalFSBackend, MemoryBackend
+from repro.core.kvcodec import load_kv, read_kv_info, save_kv
+from repro.core.risp import TSAR
+from repro.models.layers import init_params
+from repro.net import DistributedSingleFlight, RemoteBackend, StoreServer
+from repro.sched.stats import TenantLedger
+from repro.serve import FabricSnapshotStore, ServeEngine
+from repro.train import build_param_specs
+
+CELL = ShapeCell("t", "train", {"seq_len": 16, "global_batch": 4})
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = init_params(
+        jax.random.PRNGKey(1), build_param_specs(cfg, CELL), cfg.dtype
+    )
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompt(model):
+    cfg, _ = model
+    rng = np.random.default_rng(7)
+    return rng.integers(0, cfg.vocab, size=24).tolist()  # 3 chunks of 8
+
+
+@pytest.fixture(scope="module")
+def reference(model, prompt):
+    """Cold generation — no snapshot ever restored."""
+    cfg, params = model
+    eng = ServeEngine(cfg, params, max_len=64, chunk=8)
+    toks, st = eng.generate(prompt, max_new_tokens=4)
+    assert st.chunks_skipped == 0
+    return toks
+
+
+def _fabric_engine(model, backend, **kw):
+    cfg, params = model
+    snaps = FabricSnapshotStore(backend, **kw)
+    return ServeEngine(
+        cfg, params, max_len=64, chunk=8, policy=TSAR(), snapshots=snaps
+    )
+
+
+# -- codec ---------------------------------------------------------------------
+def test_kv_codec_bit_exact_and_deterministic(tmp_path):
+    rng = np.random.default_rng(0)
+    tree = {
+        "layers": [
+            {
+                "k": rng.standard_normal((1, 2, 8, 4), dtype=np.float32),
+                "v": rng.standard_normal((1, 2, 8, 4), dtype=np.float32),
+            }
+            for _ in range(2)
+        ],
+        "pos": np.arange(8, dtype=np.int32),
+    }
+    backend = LocalFSBackend(tmp_path)
+    info = save_kv(backend, "kv/a", tree, 8, prefill_s=0.25)
+    out, length, info2 = load_kv(backend, "kv/a", verify=True)
+    assert length == 8 and info2.prefill_s == 0.25
+    for want, got in zip(
+        jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)
+    ):
+        assert want.dtype == got.dtype and want.shape == got.shape
+        # bit-exact, not approximately equal
+        np.testing.assert_array_equal(
+            want.view(np.uint8), got.view(np.uint8)
+        )
+    # identical input -> identical payloads and manifest (modulo the
+    # save timestamp): the encode is deterministic, so snapshots are
+    # content-addressable across processes
+    import json as _json
+
+    save_kv(backend, "kv/b", tree, 8, prefill_s=0.25)
+    for i in range(info.n_leaves):
+        assert backend.read_blob("kv/a", f"kv{i}.bin") == backend.read_blob(
+            "kv/b", f"kv{i}.bin"
+        )
+    m_a = _json.loads(backend.read_blob("kv/a", "manifest.json"))
+    m_b = _json.loads(backend.read_blob("kv/b", "manifest.json"))
+    m_a.pop("created_at"), m_b.pop("created_at")
+    assert m_a == m_b
+    assert read_kv_info(backend, "kv/a").n_leaves == info.n_leaves
+
+
+def test_generation_from_restored_snapshots_matches_cold(
+    model, prompt, reference, tmp_path
+):
+    """An engine that prefilled nothing (every chunk restored from another
+    engine's fabric snapshots) must emit the exact same tokens."""
+    root = LocalFSBackend(tmp_path)
+    writer = _fabric_engine(model, root)
+    warm_toks, warm_st = writer.generate(prompt, max_new_tokens=4)
+    assert warm_toks == reference
+    assert warm_st.stored_prefixes >= 1
+
+    # brand-new engine, brand-new policy, same store root: full-prefix hit
+    # on its FIRST request — cross-process adoption through the fabric
+    reader = _fabric_engine(model, LocalFSBackend(tmp_path))
+    toks, st = reader.generate(prompt, max_new_tokens=4)
+    assert st.chunks_skipped == st.n_chunks == 3
+    assert toks == reference
+
+
+# -- racing engines ------------------------------------------------------------
+def _served_engine(model, port, **store_kw):
+    """One 'process': its own connection, snapshot store, and flight."""
+    rb = RemoteBackend(f"127.0.0.1:{port}")
+    snaps = FabricSnapshotStore(rb, events_from=rb, **store_kw)
+    flight = DistributedSingleFlight(
+        rb, stored_fn=snaps.contains, lease_timeout_s=30
+    )
+    cfg, params = model
+    eng = ServeEngine(
+        cfg, params, max_len=64, chunk=8,
+        policy=TSAR(), snapshots=snaps, flight=flight,
+    )
+    return eng, flight, rb
+
+
+def test_racing_engines_prefill_shared_prefix_exactly_once(
+    model, prompt, reference
+):
+    server = StoreServer(MemoryBackend()).start()
+    eng_a, flight_a, rb_a = _served_engine(model, server.port)
+    eng_b, flight_b, rb_b = _served_engine(model, server.port)
+    barrier = threading.Barrier(2)
+    results: dict[str, tuple] = {}
+
+    def run(name, eng):
+        barrier.wait()
+        results[name] = eng.generate(prompt, max_new_tokens=4)
+
+    try:
+        threads = [
+            threading.Thread(target=run, args=("a", eng_a)),
+            threading.Thread(target=run, args=("b", eng_b)),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+        assert set(results) == {"a", "b"}
+        stats = {k: v[1] for k, v in results.items()}
+        # both emit the cold-reference tokens
+        assert results["a"][0] == reference and results["b"][0] == reference
+        # exactly one engine won the fleet-wide election and prefilled;
+        # the other restored the leader's snapshot and computed nothing
+        assert flight_a.remote_leads + flight_b.remote_leads == 1
+        leader = "a" if flight_a.remote_leads else "b"
+        follower = "b" if leader == "a" else "a"
+        assert stats[leader].chunks_skipped == 0
+        assert stats[leader].stored_prefixes >= 1
+        assert stats[follower].chunks_skipped == stats[follower].n_chunks
+        assert stats[follower].stored_prefixes == 0
+        # only the leader ever persisted snapshots
+        total_saves = int(
+            eng_a.snapshots._m_saves.value + eng_b.snapshots._m_saves.value
+        )
+        assert total_saves == stats[leader].stored_prefixes
+    finally:
+        rb_a.close()
+        rb_b.close()
+        server.stop()
+
+
+def test_follower_reelects_when_leader_dies_mid_prefill(
+    model, prompt, reference
+):
+    server = StoreServer(MemoryBackend()).start()
+    eng_a, flight_a, rb_a = _served_engine(model, server.port)
+    eng_b, flight_b, rb_b = _served_engine(model, server.port)
+    leader_started = threading.Event()
+    real = eng_a._prefill_prefix
+
+    def dying_prefill(*a, **kw):
+        # the lease is already held when the flight invokes the produce fn:
+        # signal the follower to start contending, then die
+        leader_started.set()
+        time.sleep(0.1)
+        raise RuntimeError("accelerator lost")
+
+    eng_a._prefill_prefix = dying_prefill
+    outcome: dict[str, object] = {}
+
+    def run_a():
+        try:
+            eng_a.generate(prompt, max_new_tokens=4)
+        except RuntimeError as e:
+            outcome["a_error"] = e
+
+    try:
+        t_a = threading.Thread(target=run_a)
+        t_a.start()
+        assert leader_started.wait(30), "doomed leader never took the lease"
+        toks, st = eng_b.generate(prompt, max_new_tokens=4)
+        t_a.join(60)
+        # the dying leader surfaced its own failure...
+        assert isinstance(outcome.get("a_error"), RuntimeError)
+        # ...and the follower re-elected, prefilled, and served correctly
+        assert toks == reference
+        assert st.chunks_skipped == 0 and st.stored_prefixes >= 1
+        assert flight_b.remote_leads == 1
+        assert flight_b.remote_waits >= 1
+        # the recovered engine A serves from B's snapshots afterwards
+        eng_a._prefill_prefix = real
+        toks2, st2 = eng_a.generate(prompt, max_new_tokens=4)
+        assert toks2 == reference
+        assert st2.chunks_skipped == st2.n_chunks
+    finally:
+        rb_a.close()
+        rb_b.close()
+        server.stop()
+
+
+# -- zero-phantom eviction convergence ----------------------------------------
+def test_eviction_converges_catalog_policy_ledger(model, prompt):
+    backend = MemoryBackend()
+    catalog = Catalog(backend, persist=False)
+    ledger = TenantLedger()
+    eng = _fabric_engine(
+        model, backend, catalog=catalog, ledger=ledger, tenant="tenant:a"
+    )
+    eng.generate(prompt, max_new_tokens=2)
+    snaps = eng.snapshots
+    assert snaps.n_snapshots >= 1
+    keys = [k for k in list(snaps._records)]
+    assert ledger.bytes_stored("tenant:a") == snaps.snapshot_bytes()
+    for key in keys:
+        assert catalog.index.get(key) is not None
+        assert key in eng.policy.stored
+    # evict everything, one key at a time, through the store's own path
+    for key in keys:
+        snaps.drop(key)
+        assert snaps.record(key) is None
+        assert catalog.index.get(key) is None, "catalog phantom"
+        assert key not in eng.policy.stored, "policy phantom"
+        assert not backend.exists(key)
+    assert ledger.bytes_stored("tenant:a") == 0, "ledger phantom"
+    assert snaps.snapshot_bytes() == 0
+
+
+def test_remote_eviction_event_prunes_other_engines(model, prompt):
+    """Engine A evicts; engine B (which adopted the snapshot) learns through
+    the server's event stream and forgets — no phantom planning."""
+    server = StoreServer(MemoryBackend()).start()
+    eng_a, _, rb_a = _served_engine(model, server.port)
+    eng_b, _, rb_b = _served_engine(model, server.port)
+    try:
+        eng_a.generate(prompt, max_new_tokens=2)
+        # B adopts A's snapshots (restores them on its first request)
+        _, st_b = eng_b.generate(prompt, max_new_tokens=2)
+        assert st_b.chunks_skipped == st_b.n_chunks
+        keys = list(eng_b.snapshots._records)
+        assert keys and all(k in eng_b.policy.stored for k in keys)
+        for key in list(eng_a.snapshots._records):
+            eng_a.snapshots.drop(key)
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            if all(eng_b.snapshots.record(k) is None for k in keys):
+                break
+            time.sleep(0.05)
+        for key in keys:
+            assert eng_b.snapshots.record(key) is None, "record phantom on B"
+            assert key not in eng_b.policy.stored, "policy phantom on B"
+    finally:
+        rb_a.close()
+        rb_b.close()
+        server.stop()
